@@ -1,0 +1,124 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), in seconds per step, per the brief:
+  compute    = HLO_FLOPs(loop-aware, per device) / peak_FLOP/s
+  memory     = HLO_bytes(per device)             / HBM_bw
+  collective = collective wire bytes(per device) / ICI link bw
+
+plus MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (serve), the useful-
+compute ratio, the dominant term, and a one-line "what would move it".
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Optional
+
+from repro.common.constants import (
+    HBM_BANDWIDTH,
+    HBM_BYTES_PER_CHIP,
+    ICI_BANDWIDTH_PER_LINK,
+    PEAK_FLOPS_BF16,
+)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_artifacts(art_dir: str = ART_DIR, suffix: Optional[str] = None) -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        d["_file"] = os.path.basename(path)
+        if suffix is None or d["_file"].endswith(suffix + ".json"):
+            out.append(d)
+    return out
+
+
+def terms(d: dict) -> dict:
+    n_dev = d["mesh"]["devices"]
+    # loop-aware flops are PER DEVICE (the compiled module is the per-device
+    # SPMD program); fall back to cost_analysis when the parse found nothing
+    flops_dev = max(d.get("hlo_flops_loopaware", 0.0), d.get("hlo_flops", 0.0))
+    bytes_dev = max(d.get("hlo_bytes_est", 0.0), d.get("hlo_bytes", 0.0))
+    coll_dev = d["collectives"]["total_bytes"]
+    t_c = flops_dev / PEAK_FLOPS_BF16
+    t_m = bytes_dev / HBM_BANDWIDTH
+    t_n = coll_dev / ICI_BANDWIDTH_PER_LINK
+    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_n), key=lambda kv: kv[1])[0]
+    model_flops_dev = d["model_flops"] / n_dev
+    useful = model_flops_dev / flops_dev if flops_dev else 0.0
+    step_time = max(t_c, t_m, t_n)  # overlap-optimistic bound
+    mfu = model_flops_dev / PEAK_FLOPS_BF16 / step_time if step_time else 0.0
+    return {
+        "arch": d["arch"],
+        "shape": d["shape"],
+        "mesh": "x".join(str(s) for s in d["mesh"]["shape"]),
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_n,
+        "dominant": dominant,
+        "model_flops": d["model_flops"],
+        "useful_ratio": useful,
+        "roofline_frac": mfu,  # MODEL_FLOPS-based fraction of peak at bound
+        "peak_gib": d["memory"]["peak_per_device"] / 2**30,
+        "resident_gib": d["memory"].get("resident_bytes", 0) / 2**30,
+        "fits_hbm": d["memory"].get("resident_bytes", 0) <= HBM_BYTES_PER_CHIP,
+        "_file": d["_file"],
+    }
+
+
+_SUGGEST = {
+    "compute": "increase arithmetic efficiency (fuse pointwise into matmuls, "
+               "larger per-device tiles, reduce remat recompute)",
+    "memory": "cut HBM traffic (fuse ops, bf16/int8 storage, smaller "
+              "activations via sequence sharding or chunked loss)",
+    "collective": "cut wire bytes (truncate-before-repartition, overlap "
+                  "collectives with compute, shard to reduce resharding)",
+}
+
+
+def suggestion(row: dict) -> str:
+    return _SUGGEST[row["dominant"]]
+
+
+def markdown_table(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | model/HLO | roofline frac | resident GiB |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{r['resident_gib']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    arts = load_artifacts()
+    rows = [terms(d) for d in arts if not d["_file"].endswith("_nosp.json")]
+    pod_rows = [r for r in rows if r["mesh"] == "16x16"]
+    if not pod_rows:
+        return 0.0, {"error": "no dry-run artifacts found; run launch/dryrun first"}
+    dominant_counts = {}
+    for r in pod_rows:
+        dominant_counts[r["dominant"]] = dominant_counts.get(r["dominant"], 0) + 1
+    worst = min(pod_rows, key=lambda r: r["roofline_frac"])
+    best = max(pod_rows, key=lambda r: r["roofline_frac"])
+    derived = {
+        "cells": len(pod_rows),
+        "dominant_counts": dominant_counts,
+        "worst": f"{worst['arch']}/{worst['shape']} frac={worst['roofline_frac']:.3f}",
+        "best": f"{best['arch']}/{best['shape']} frac={best['roofline_frac']:.3f}",
+    }
+    return 0.0, derived
+
+
+if __name__ == "__main__":
+    arts = load_artifacts()
+    rows = [terms(d) for d in arts if not d["_file"].endswith("_nosp.json")]
+    print(markdown_table(sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"]))))

@@ -1,0 +1,48 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (derived = compact JSON).
+
+  fig4_cloud      submission + weak scaling (paper Fig. 4a/4b, Fig. 8)
+  fig6_scaling    DD vs PP parallel efficiency projection (Fig. 6/7)
+  comm_reduction  truncate-before-repartition bytes (paper §IV-C, ~160x)
+  table1_train    FNO surrogate quality, NS + CO2 (Table I, scale-reduced)
+  cost_speedup    5-orders speedup + 3200x cost claims (§V)
+  roofline        three-term roofline summary over dry-run artifacts
+"""
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_cloud, bench_comm, bench_cost, bench_scaling, bench_train
+    from benchmarks import roofline
+
+    entries = [
+        ("fig4_cloud", bench_cloud.run),
+        ("fig6_scaling", bench_scaling.run),
+        ("comm_reduction", bench_comm.run),
+        ("table1_train", bench_train.run),
+        ("cost_speedup", bench_cost.run),
+        ("roofline", roofline.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = 0
+    for name, fn in entries:
+        if only and name != only:
+            continue
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.2f},{json.dumps(derived, sort_keys=True)}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,{{}}  # FAILED")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(failures)
+
+
+if __name__ == "__main__":
+    main()

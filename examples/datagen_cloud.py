@@ -1,0 +1,62 @@
+"""Clusterless training-data generation (the paper's Redwood workflow).
+
+Spins up a local "batch pool" (process workers standing in for Azure Batch
+VMs), broadcasts shared config through the object store, runs Navier-Stokes
+simulations in parallel, writes each training pair into the chunked array
+store, and prints the cost/scaling report — the §V-A pipeline end to end.
+
+    PYTHONPATH=src python examples/datagen_cloud.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.cloud import BatchPool, LocalProcessBackend, SimBackend, SimConfig
+from repro.data.pde.navier_stokes import simulate_task
+from repro.data.store import ArrayStore
+
+N_TASKS = 8
+GRID, NT = 16, 4
+
+with tempfile.TemporaryDirectory() as tmp:
+    pool = BatchPool(
+        LocalProcessBackend(max_workers=4),
+        store_root=f"{tmp}/blobs",
+        vm_type="E4s_v3",
+        n_vms=4,
+    )
+    # sphere centers vary per task (the paper varies sphere location)
+    rng = np.random.default_rng(0)
+    centers = [tuple(rng.uniform(0.25, 0.75, size=3)) for _ in range(N_TASKS)]
+
+    print(f"submitting {N_TASKS} Navier-Stokes simulations to the pool...")
+    results = pool.map(
+        simulate_task, [(c, GRID, NT) for c in centers], speculative=True
+    )
+
+    xs = ArrayStore.create(f"{tmp}/x", (N_TASKS, GRID, GRID, GRID), "f4", (1, GRID, GRID, GRID))
+    ys = ArrayStore.create(f"{tmp}/y", (N_TASKS, GRID, GRID, GRID, NT), "f4", (1, GRID, GRID, GRID, NT))
+    for i, (chi, vort) in enumerate(results):
+        xs.write_chunk((i, 0, 0, 0), chi[None])
+        ys.write_chunk((i, 0, 0, 0, 0), vort[None])
+    print(f"stored {xs.n_complete()} input chunks, {ys.n_complete()} output chunks")
+
+    report = pool.cost_report()
+    print(
+        f"cost report: {report['tasks']} tasks, mean {report['mean_task_s']:.2f}s/task, "
+        f"${report['usd']:.4f} on {report['vm_type']} "
+        f"(speculative re-executions: {report['speculated']})"
+    )
+    pool.shutdown()
+
+# --- paper-scale projection with the simulated Azure Batch backend --------
+sim = SimBackend(SimConfig())
+rep = sim.run_job(n_tasks=3200, n_vms=1000, task_runtime_s=15 * 60)
+print(
+    f"\npaper-scale projection (3200 NS tasks, 1000 VMs, 15 min/task):\n"
+    f"  submission {rep.submit_time_s:.1f}s, makespan {rep.makespan_s/3600:.2f}h\n"
+    f"  weak-scaling efficiency {rep.weak_scaling_efficiency(15*60)*100:.1f}% "
+    f"(paper Fig. 4b metric: submission-only serial term; paper reports >99%)\n"
+    f"  end-to-end efficiency {rep.end_to_end_efficiency(15*60)*100:.1f}% "
+    f"(also counts VM startup + last-round quantization)"
+)

@@ -1,0 +1,67 @@
+"""Quickstart: the paper's model-parallel FNO in 60 lines.
+
+Runs on CPU with 8 simulated devices: builds a small 4-D FNO, checks that
+the domain-decomposed forward (paper Alg. 1/2) matches the serial oracle to
+float precision, compares against the paper's pipeline-parallel baseline,
+and trains a few steps with the distributed step.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FNOConfig, fno_forward, init_params, make_dist_forward,
+    make_pipeline_forward, mse_loss, param_specs,
+)
+from repro.core.partition import make_mesh
+from repro.train import AdamWConfig, adamw_update, init_opt_state
+
+cfg = FNOConfig(grid=(16, 16, 8, 8), modes=(4, 4, 2, 3), width=8,
+                in_channels=1, out_channels=1, n_blocks=4, decoder_dim=16)
+key = jax.random.PRNGKey(0)
+params = init_params(key, cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, 16, 16, 8, 8))
+y = jnp.tanh(jnp.roll(x, 1, axis=2))  # synthetic target
+
+# --- serial oracle vs domain decomposition (2 data x 4 model devices) ----
+mesh = make_mesh((2, 4), ("data", "model"))
+fwd_dd = make_dist_forward(mesh, cfg, dp_axes=("data",))
+out_serial = jax.jit(lambda p, x: fno_forward(p, x, cfg))(params, x)
+out_dd = jax.jit(fwd_dd)(params, x)
+np.testing.assert_allclose(np.asarray(out_dd), np.asarray(out_serial), rtol=1e-4, atol=1e-5)
+print(f"domain-decomposed == serial  (max diff {float(jnp.abs(out_dd - out_serial).max()):.2e})")
+
+# --- the paper's pipeline-parallel comparison baseline --------------------
+mesh_pp = make_mesh((1, 4), ("data", "model"))
+fwd_pp = make_pipeline_forward(mesh_pp, cfg, n_micro=2)
+out_pp = jax.jit(fwd_pp)(params, x)
+np.testing.assert_allclose(np.asarray(out_pp), np.asarray(out_serial), rtol=1e-4, atol=1e-5)
+print("pipeline baseline matches too (but see Fig. 6: its bubble efficiency "
+      "is M/(M+P-1) = 0.4 here vs ~1.0 for domain decomposition)")
+
+# --- train a few steps with the distributed forward -----------------------
+opt_cfg = AdamWConfig(lr=2e-2)
+opt = init_opt_state(params)
+
+@jax.jit
+def train_step(params, opt, x, y):
+    def loss_fn(p):
+        return mse_loss(fwd_dd(p, x), y)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt, _ = adamw_update(grads, opt, params, opt_cfg)
+    return params, opt, loss
+
+losses = []
+for step in range(40):
+    params, opt, loss = train_step(params, opt, x, y)
+    losses.append(float(loss))
+    if step % 10 == 0 or step == 39:
+        print(f"step {step:3d}  loss {losses[-1]:.5f}")
+assert losses[-1] < losses[0], "loss should decrease"
+print("quickstart OK")

@@ -1,0 +1,12 @@
+"""Serve a (reduced-config) assigned architecture with continuous batching.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-lite-16b
+"""
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "gemma-7b", "--requests", "6"])
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

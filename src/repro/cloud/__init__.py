@@ -1,0 +1,9 @@
+"""Clusterless cloud batch layer (the paper's Redwood.jl, in Python)."""
+from repro.cloud.api import BatchPool, remote, VM_PRICES, SPOT_DISCOUNT  # noqa: F401
+from repro.cloud.backend import (  # noqa: F401
+    LocalProcessBackend,
+    SimBackend,
+    SimConfig,
+    ThreadBackend,
+)
+from repro.cloud.objectstore import BlobRef, ObjectStore  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.common import constants  # noqa: F401

@@ -1,0 +1,32 @@
+"""Hardware constants for the roofline model (TPU v5e target).
+
+The container is CPU-only; these numbers parameterize the analytic roofline
+derived from AOT-compiled HLO (see launch/roofline.py). Values provided by
+the assignment brief.
+"""
+
+# Per-chip peak bf16 matmul throughput.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+
+# Per-chip HBM bandwidth.
+HBM_BANDWIDTH = 819e9  # B/s
+
+# Per-link ICI bandwidth (one direction). v5e has a 2D torus; each chip has
+# 4 links (x+/x-/y+/y-). We report the collective term against a single link
+# per the brief ("~50 GB/s/link ICI").
+ICI_BANDWIDTH_PER_LINK = 50e9  # B/s
+ICI_LINKS_PER_CHIP = 4
+
+# HBM capacity per v5e chip (for fit checks in EXPERIMENTS.md commentary).
+HBM_BYTES_PER_CHIP = 16 * 1024**3
+
+# Production mesh shape (per pod).
+POD_MESH_SHAPE = (16, 16)
+POD_MESH_AXES = ("data", "model")
+MULTIPOD_MESH_SHAPE = (2, 16, 16)
+MULTIPOD_MESH_AXES = ("pod", "data", "model")
+
+# Mesh axis names used throughout the framework.
+AXIS_POD = "pod"
+AXIS_DATA = "data"
+AXIS_MODEL = "model"

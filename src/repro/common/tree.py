@@ -1,0 +1,63 @@
+"""Small pytree / numerics utilities shared across subsystems."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStructs too)."""
+    leaves = jax.tree.leaves(tree)
+    total = 0
+    for leaf in leaves:
+        shape = getattr(leaf, "shape", ())
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is None:
+            continue
+        size = 1
+        for d in shape:
+            size *= int(d)
+        total += size * jnp.dtype(dtype).itemsize
+    return total
+
+
+def tree_params(tree) -> int:
+    """Total parameter count of all array leaves."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = getattr(leaf, "shape", ())
+        size = 1
+        for d in shape:
+            size *= int(d)
+        total += size
+    return total
+
+
+def tree_cast(tree, dtype):
+    """Cast all inexact leaves to dtype (leave ints/bools alone)."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating) or jnp.issubdtype(
+            x.dtype, jnp.complexfloating
+        ):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)
+
+
+def tree_all_finite(tree) -> jax.Array:
+    """Scalar bool: every inexact leaf is finite."""
+    leaves = [
+        jnp.all(jnp.isfinite(x))
+        for x in jax.tree.leaves(tree)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact)
+    ]
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(leaves))
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)

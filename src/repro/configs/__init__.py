@@ -1,0 +1,87 @@
+"""Architecture registry: the 10 assigned archs + the paper's own FNOs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    EncoderConfig,
+    LM_SHAPES,
+    MLAConfig,
+    ShapeConfig,
+    cell_supported,
+    get_shape,
+    input_specs,
+)
+
+ARCH_IDS = (
+    "deepseek-moe-16b",
+    "deepseek-v2-lite-16b",
+    "mamba2-370m",
+    "whisper-tiny",
+    "chameleon-34b",
+    "qwen1.5-32b",
+    "chatglm3-6b",
+    "gemma-7b",
+    "minitron-8b",
+    "recurrentgemma-2b",
+)
+
+FNO_IDS = ("fno-ns3d", "fno-sleipner")
+
+_MODULES = {arch_id: arch_id.replace("-", "_").replace(".", "_") for arch_id in ARCH_IDS}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_fno(name: str):
+    if name not in FNO_IDS:
+        raise KeyError(f"unknown FNO config {name!r}")
+    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+    return mod.CONFIG, mod.SHAPES
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """Tiny same-family config for CPU smoke tests (one fwd/train step)."""
+    from repro.models.moe import MoEConfig
+    from repro.models.ssm import SSMConfig
+    from repro.models.rglru import RGLRUConfig
+
+    changes = dict(
+        n_layers=3 if cfg.family == "hybrid" else 2,
+        d_model=64,
+        n_heads=4,
+        kv_heads=max(1, min(cfg.kv_heads, 2)),
+        d_ff=0 if cfg.family == "ssm" else 128,
+        vocab=512,
+        head_dim=16,
+        window=16 if cfg.window else None,
+    )
+    if cfg.moe:
+        changes["moe"] = MoEConfig(
+            n_experts=8,
+            top_k=2,
+            d_expert=32,
+            n_shared=cfg.moe.n_shared and 1,
+            first_dense_ff=64 if cfg.moe.first_dense_ff else 0,
+            norm_topk=cfg.moe.norm_topk,
+        )
+    if cfg.mla:
+        changes["mla"] = MLAConfig(kv_lora=32, dh_nope=16, dh_rope=8, dh_v=16)
+        changes["head_dim"] = None
+    if cfg.ssm:
+        changes["ssm"] = SSMConfig(d_state=16, head_dim=16, chunk=16)
+        changes["head_dim"] = None
+        changes["n_heads"] = 8
+        changes["kv_heads"] = 8
+    if cfg.rglru:
+        changes["rglru"] = RGLRUConfig(d_rnn=0, conv_kernel=4)
+    if cfg.encoder:
+        changes["encoder"] = EncoderConfig(n_layers=2, frames=12)
+    return dataclasses.replace(cfg, **changes)

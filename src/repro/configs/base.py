@@ -1,0 +1,210 @@
+"""Architecture & shape configuration schema.
+
+One ``ArchConfig`` per assigned architecture (exact numbers from the
+assignment brief), plus ``ShapeConfig`` for the four assigned input shapes.
+``input_specs(arch, shape)`` produces ShapeDtypeStruct stand-ins for the
+dry-run (no allocation); smoke tests use ``reduced()`` configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.moe import MoEConfig
+from repro.models.ssm import SSMConfig
+from repro.models.rglru import RGLRUConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    dh_nope: int = 128
+    dh_rope: int = 64
+    dh_v: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style encoder; the conv/mel frontend is a stub: input_specs
+    provides precomputed frame embeddings [b, frames, d_model]."""
+    n_layers: int = 4
+    frames: int = 1500
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    window: Optional[int] = None      # sliding-window local attention
+    mlp_act: str = "swiglu"
+    embed_scale: bool = False         # gemma: x *= sqrt(d)
+    norm: str = "rms"                 # rms | ln
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    block_pattern: Tuple[str, ...] = ()   # hybrid pattern, e.g. (rec, rec, attn)
+    encoder: Optional[EncoderConfig] = None
+    dtype: str = "bfloat16"
+    notes: str = ""
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    # -- capability flags for the assigned shape grid ---------------------
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if long_500k is feasible (SSM / hybrid with bounded window)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all 10 assigned archs have a decode path
+
+    def approx_params(self) -> int:
+        """Analytic parameter count (for 6ND roofline term)."""
+        d, v = self.d_model, self.vocab
+        total = v * d  # embed
+        total += v * d  # lm_head
+        hd = self.head_dim_
+        for kind in self.layer_kinds():
+            if kind == "ssm":
+                s = self.ssm
+                di = s.d_inner(d)
+                h = s.n_heads(d)
+                total += d * (2 * di + 2 * s.d_state + h)  # in_proj
+                total += di * d + s.conv_dim(d) * s.conv_kernel + di
+                continue
+            if kind == "rec":
+                w = self.rglru.width(d)
+                total += 2 * d * w + 2 * w * w + w * d + 4 * w
+                continue
+            # attention
+            if self.mla is not None:
+                m = self.mla
+                total += d * self.n_heads * (m.dh_nope + m.dh_rope)
+                total += d * (m.kv_lora + m.dh_rope)
+                total += m.kv_lora * self.n_heads * (m.dh_nope + m.dh_v)
+                total += self.n_heads * m.dh_v * d
+            else:
+                total += d * self.n_heads * hd + 2 * d * self.kv_heads * hd
+                total += self.n_heads * hd * d
+            # mlp
+            if kind == "moe":
+                mo = self.moe
+                total += d * mo.n_experts  # router
+                total += mo.n_experts * 3 * d * mo.d_expert
+                total += mo.n_shared * 3 * d * mo.d_expert
+            elif kind == "dense0":
+                total += 3 * d * self.moe.first_dense_ff
+            elif kind in ("dense", "attn"):
+                mult = 3 if self.mlp_act in ("swiglu", "geglu") else 2
+                total += mult * d * self.d_ff
+        return total
+
+    def approx_active_params(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.approx_params()
+        d = self.d_model
+        mo = self.moe
+        dense_total = self.approx_params()
+        inactive = (mo.n_experts - mo.top_k) * 3 * d * mo.d_expert
+        n_moe_layers = sum(1 for k in self.layer_kinds() if k == "moe")
+        return dense_total - n_moe_layers * inactive
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind sequence."""
+        if self.family == "ssm":
+            return ("ssm",) * self.n_layers
+        if self.family == "hybrid":
+            pat = self.block_pattern or ("rec", "rec", "attn")
+            kinds = []
+            while len(kinds) < self.n_layers:
+                kinds.extend(pat)
+            return tuple(kinds[: self.n_layers])
+        if self.family == "moe":
+            first = ("dense0",) if (self.moe and self.moe.first_dense_ff) else ("moe",)
+            return first + ("moe",) * (self.n_layers - 1)
+        if self.family == "encdec":
+            return ("dense",) * self.n_layers
+        return ("dense",) * self.n_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+LM_SHAPES = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in LM_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cell_supported(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether this (arch x shape) dry-run cell runs, and why not if not."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, "full-attention arch: O(S^2) at 524k ctx — skipped per assignment"
+    return True, ""
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if arch.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, arch.encoder.frames, arch.d_model), jnp.dtype(arch.dtype)
+            )
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if arch.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, arch.encoder.frames, arch.d_model), jnp.dtype(arch.dtype)
+            )
+        return specs
+    # decode: one token per sequence + cache of length seq_len
+    specs = {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "index": jax.ShapeDtypeStruct((), i32),
+    }
+    return specs

@@ -1,0 +1,22 @@
+"""The paper's Sleipner CO2-flow FNO (§V-B, CCS benchmark).
+
+Paper grid 262x118x64 x 86 time steps padded to 256x128x64x88 (the original
+2.1M-cell simulation grid, mesh-divisible). Inputs: binary injection-well
+map (repeated along t); outputs: CO2 saturation history.
+"""
+from repro.core.fno import FNOConfig
+
+CONFIG = FNOConfig(
+    grid=(256, 128, 64, 88),
+    modes=(24, 16, 8, 10),
+    width=40,
+    in_channels=1,
+    out_channels=1,
+    n_blocks=4,
+    decoder_dim=128,
+)
+
+SHAPES = (
+    ("train_b32", 32, "train"),
+    ("infer_b32", 32, "infer"),
+)

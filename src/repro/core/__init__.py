@@ -1,0 +1,23 @@
+"""The paper's contribution: domain-decomposed model parallelism for FNOs.
+
+Public surface:
+  * ``CartPartition`` / ``repartition`` — DistDL-style partition + R_{x->y}
+  * ``dfft`` — distributed truncated 4-D FFT (Alg. 2 operators + adjoints)
+  * ``FNOConfig`` / ``fno_forward`` / ``make_dist_forward`` — serial oracle
+    and model-parallel FNO (paper + [31] baseline schedules)
+  * ``make_pipeline_forward`` — GPipe baseline the paper compares against
+  * ``ulysses_attention`` — the repartition primitive applied to attention
+"""
+from repro.core.partition import CartPartition, make_mesh  # noqa: F401
+from repro.core.repartition import repartition, repartition_t  # noqa: F401
+from repro.core.fno import (  # noqa: F401
+    FNOConfig,
+    fno_forward,
+    fno_forward_dist,
+    init_params,
+    make_dist_forward,
+    mse_loss,
+    param_specs,
+)
+from repro.core.pipeline import bubble_efficiency, make_pipeline_forward  # noqa: F401
+from repro.core.ulysses import ulysses_attention  # noqa: F401

@@ -1,0 +1,86 @@
+"""Cartesian partition descriptors (DistDL-style) for JAX meshes.
+
+The paper's model parallelism is expressed over Cartesian partitions of
+high-dimensional tensors ("the input tensor X_{bcxyzt} is distributed across
+the first spatial dimension x"). In JAX the partition is a mapping from
+tensor dims to named mesh axes; this module gives that mapping a first-class
+descriptor with validation (divisibility) and conversion to PartitionSpec /
+NamedSharding, so the FNO core and the tests share one source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class CartPartition:
+    """Maps tensor dimensions to mesh axis names.
+
+    ``dims[i]`` is the mesh axis (or tuple of axes) sharding tensor dim i,
+    or None for a replicated dim. This is a thin, validated wrapper around
+    PartitionSpec that also remembers *which* dim is "the partitioned dim"
+    for the paper's repartition operator.
+    """
+
+    dims: Tuple[Optional[AxisName], ...]
+
+    def spec(self) -> P:
+        return P(*self.dims)
+
+    def sharding(self, mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.spec())
+
+    def sharded_dims(self) -> Tuple[int, ...]:
+        return tuple(i for i, a in enumerate(self.dims) if a is not None)
+
+    def axis_of(self, dim: int) -> Optional[AxisName]:
+        return self.dims[dim]
+
+    def with_moved(self, src_dim: int, dst_dim: int) -> "CartPartition":
+        """Partition after repartitioning src_dim -> dst_dim (R_{x->y})."""
+        axis = self.dims[src_dim]
+        if axis is None:
+            raise ValueError(f"dim {src_dim} is not sharded; cannot repartition")
+        if self.dims[dst_dim] is not None:
+            raise ValueError(f"dim {dst_dim} already sharded by {self.dims[dst_dim]}")
+        new = list(self.dims)
+        new[src_dim] = None
+        new[dst_dim] = axis
+        return CartPartition(tuple(new))
+
+    def validate(self, shape: Sequence[int], mesh: Mesh) -> None:
+        """Check every sharded dim is divisible by its mesh-axis size."""
+        for i, axis in enumerate(self.dims):
+            if axis is None:
+                continue
+            axes = (axis,) if isinstance(axis, str) else axis
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if shape[i] % size != 0:
+                raise ValueError(
+                    f"tensor dim {i} (size {shape[i]}) not divisible by mesh "
+                    f"axes {axes} (product {size})"
+                )
+
+
+def axis_size(mesh_or_none, axis: str) -> int:
+    """Size of a named axis, from a Mesh or from inside shard_map."""
+    if mesh_or_none is None:
+        return jax.lax.axis_size(axis)
+    return mesh_or_none.shape[axis]
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """jax.make_mesh with explicit Auto axis types (silences 0.9 migration)."""
+    return jax.make_mesh(
+        tuple(shape),
+        tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

@@ -1,0 +1,86 @@
+"""Sequence-parallel attention via the paper's repartition primitive.
+
+Beyond-paper application of the core idea: the FNO block re-partitions the
+sharded *spatial* dim to make the FFT local; attention needs the *sequence*
+dim local per head. The identical all-to-all pattern (DeepSpeed-Ulysses)
+gives sequence parallelism for the LM architectures:
+
+    q,k,v [b, s/P, h, d]  --R_{s->h}-->  [b, s, h/P, d]
+    local attention over full sequence for h/P heads
+    o     [b, s, h/P, d]  --R_{h->s}-->  [b, s/P, h, d]
+
+GQA: if kv_heads is divisible by P the same repartition applies to k/v;
+otherwise k/v are all-gathered along the sequence axis (cheap when
+kv_heads << heads, e.g. MQA).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.repartition import repartition
+
+
+def ulysses_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    axis_name: str,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    attn_fn=None,
+) -> jax.Array:
+    """Call inside shard_map; q/k/v are local shards [b, s/P, h(kv), d].
+
+    attn_fn(q, k, v, causal, scale) computes local attention with layout
+    [b, s, h, d]; defaults to a dense reference. Returns [b, s/P, h, d].
+    """
+    p = jax.lax.axis_size(axis_name)
+    h = q.shape[2]
+    kvh = k.shape[2]
+    if h % p:
+        raise ValueError(f"heads {h} not divisible by axis size {p}")
+
+    # R_{s->h}: seq-sharded -> head-sharded.
+    hp = h // p
+    q = repartition(q, src=1, dst=2, axis_name=axis_name)
+    if kvh % p == 0:
+        k = repartition(k, src=1, dst=2, axis_name=axis_name)
+        v = repartition(v, src=1, dst=2, axis_name=axis_name)
+    else:
+        # few kv heads (GQA/MQA): gather the sequence, then select the kv
+        # head(s) that serve this shard's q heads
+        k = jax.lax.all_gather(k, axis_name, axis=1, tiled=True)
+        v = jax.lax.all_gather(v, axis_name, axis=1, tiled=True)
+        group = h // kvh
+        local_q_heads = jax.lax.axis_index(axis_name) * hp + jnp.arange(hp)
+        kv_idx = local_q_heads // group
+        k = jnp.take(k, kv_idx, axis=2)
+        v = jnp.take(v, kv_idx, axis=2)
+
+    if attn_fn is None:
+        attn_fn = _dense_attention
+    o = attn_fn(q, k, v, causal=causal, scale=scale)
+
+    # R_{h->s}: back to sequence-sharded.
+    return repartition(o, src=2, dst=1, axis_name=axis_name)
+
+
+def _dense_attention(q, k, v, *, causal, scale):
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:  # GQA: repeat kv heads per group
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.tril(jnp.ones((s, sk), bool), k=sk - s)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)

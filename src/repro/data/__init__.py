@@ -1,0 +1,2 @@
+from repro.data.store import ArrayStore  # noqa: F401
+from repro.data.tokens import StoreTokens, SyntheticTokens  # noqa: F401

@@ -1,0 +1,116 @@
+"""3-D incompressible Navier-Stokes around an immersed sphere (WaterLily
+stand-in, paper §V-A).
+
+Pseudo-spectral on a periodic box with Brinkman penalization for the
+sphere: du/dt + (u.grad)u = -grad p + nu lap u - chi/eta (u - 0), where chi
+is the sphere mask. A uniform background inflow U0 drives the wake; the
+incompressibility projection is exact in Fourier space; viscosity uses an
+integrating factor; time stepping is RK2. Output is the vorticity magnitude
+on an nt-frame time grid — the paper's training target (input = the binary
+sphere mask).
+
+This replaces WaterLily's multigrid immersed-boundary scheme with a
+TPU/JAX-friendly formulation (FFTs and elementwise ops; no unstructured
+solver), which is the documented hardware adaptation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NSConfig:
+    n: int = 32                 # grid points per dim
+    nt_frames: int = 8          # output time frames
+    steps_per_frame: int = 10
+    dt: float = 0.01
+    viscosity: float = 5e-3
+    u0: float = 1.0             # background inflow (x direction)
+    penalization: float = 1e-2  # Brinkman eta
+    sphere_radius: float = 0.12 # in box units [0,1)
+
+
+def sphere_mask(cfg: NSConfig, center: jnp.ndarray) -> jnp.ndarray:
+    """Binary mask [n,n,n] of the immersed sphere (periodic distance)."""
+    g = (jnp.arange(cfg.n) + 0.5) / cfg.n
+    x, y, z = jnp.meshgrid(g, g, g, indexing="ij")
+    def pdist(a, c):
+        d = jnp.abs(a - c)
+        return jnp.minimum(d, 1.0 - d)
+    r2 = pdist(x, center[0]) ** 2 + pdist(y, center[1]) ** 2 + pdist(z, center[2]) ** 2
+    return (r2 < cfg.sphere_radius ** 2).astype(jnp.float32)
+
+
+def _wavenumbers(n: int):
+    k = jnp.fft.fftfreq(n, d=1.0 / n) * 2 * jnp.pi
+    kx, ky, kz = jnp.meshgrid(k, k, k, indexing="ij")
+    k2 = kx ** 2 + ky ** 2 + kz ** 2
+    return kx, ky, kz, jnp.where(k2 == 0, 1.0, k2)
+
+
+def _project(uh, kx, ky, kz, k2):
+    """Leray projection onto divergence-free fields."""
+    div = kx * uh[0] + ky * uh[1] + kz * uh[2]
+    return jnp.stack([uh[0] - kx * div / k2, uh[1] - ky * div / k2, uh[2] - kz * div / k2])
+
+
+def _rhs(uh, chi, cfg, kx, ky, kz, k2):
+    u = jnp.fft.ifftn(uh, axes=(1, 2, 3)).real
+    # advection (u . grad) u, derivatives in spectral space
+    def ddx(f_hat, kvec):
+        return jnp.fft.ifftn(1j * kvec * f_hat, axes=(0, 1, 2)).real
+    adv = []
+    for i in range(3):
+        gx = ddx(uh[i], kx)
+        gy = ddx(uh[i], ky)
+        gz = ddx(uh[i], kz)
+        adv.append(u[0] * gx + u[1] * gy + u[2] * gz)
+    adv = jnp.stack(adv)
+    # Brinkman: drive velocity to zero inside the solid
+    pen = -(chi / cfg.penalization) * u
+    rhs = jnp.fft.fftn(-adv + pen, axes=(1, 2, 3))
+    return _project(rhs, kx, ky, kz, k2)
+
+
+def simulate(center: jnp.ndarray, cfg: NSConfig = NSConfig()) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (sphere mask [n,n,n], vorticity magnitude [n,n,n,nt])."""
+    chi = sphere_mask(cfg, center)
+    kx, ky, kz, k2 = _wavenumbers(cfg.n)
+    visc = jnp.exp(-cfg.viscosity * k2 * cfg.dt)
+
+    u0 = jnp.zeros((3, cfg.n, cfg.n, cfg.n), jnp.float32).at[0].set(cfg.u0)
+    # small perturbation to break symmetry
+    u0 = u0.at[1].add(0.01 * jnp.sin(2 * jnp.pi * jnp.linspace(0, 1, cfg.n))[None, :, None])
+    uh = jnp.fft.fftn(u0, axes=(1, 2, 3))
+    uh = _project(uh, kx, ky, kz, k2)
+
+    def step(uh, _):
+        r1 = _rhs(uh, chi, cfg, kx, ky, kz, k2)
+        mid = (uh + 0.5 * cfg.dt * r1) * jnp.sqrt(visc)
+        r2 = _rhs(mid, chi, cfg, kx, ky, kz, k2)
+        new = (uh + cfg.dt * r2 * jnp.sqrt(visc)) * visc
+        return new, None
+
+    def frame(uh, _):
+        uh, _ = jax.lax.scan(step, uh, None, length=cfg.steps_per_frame)
+        # vorticity magnitude
+        wx = jnp.fft.ifftn(1j * (ky * uh[2] - kz * uh[1]), axes=(0, 1, 2)).real
+        wy = jnp.fft.ifftn(1j * (kz * uh[0] - kx * uh[2]), axes=(0, 1, 2)).real
+        wz = jnp.fft.ifftn(1j * (kx * uh[1] - ky * uh[0]), axes=(0, 1, 2)).real
+        vort = jnp.sqrt(wx ** 2 + wy ** 2 + wz ** 2)
+        return uh, vort
+
+    _, frames = jax.lax.scan(frame, uh, None, length=cfg.nt_frames)
+    return chi, jnp.moveaxis(frames, 0, -1)  # [n,n,n,nt]
+
+
+def simulate_task(center_tuple, n: int = 32, nt: int = 8):
+    """Top-level picklable entry for the cloud batch API."""
+    cfg = NSConfig(n=n, nt_frames=nt)
+    chi, vort = jax.jit(lambda c: simulate(c, cfg))(jnp.asarray(center_tuple, jnp.float32))
+    return np.asarray(chi), np.asarray(vort)

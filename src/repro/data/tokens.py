@@ -1,0 +1,75 @@
+"""Deterministic synthetic token pipeline for the LM architectures.
+
+Training at 1000+ nodes needs the data layer to be (a) deterministic by
+step — so a restarted worker replays exactly the batch it crashed on
+(the fault supervisor's contract), and (b) shardable by host — each host
+materializes only its slice of the global batch. Both properties hold
+here by deriving every batch from (seed, step) with a counter-based
+generator; a store-backed variant reads packed token chunks from the
+chunked ArrayStore instead.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.data.store import ArrayStore
+
+
+class SyntheticTokens:
+    """Zipf-ish random tokens, deterministic in (seed, step, host_slice)."""
+
+    def __init__(
+        self,
+        vocab: int,
+        global_batch: int,
+        seq_len: int,
+        *,
+        seed: int = 0,
+        host_slice: Tuple[int, int] = (0, 1),  # (host_index, host_count)
+    ):
+        self.vocab = vocab
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.seed = seed
+        hi, hn = host_slice
+        assert global_batch % hn == 0
+        self.local_batch = global_batch // hn
+        self.host_index = hi
+
+    def batch(self, step: int) -> dict:
+        """-> {"tokens": [local_b, s], "targets": [local_b, s]} (int32)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_index])
+        )
+        # zipf-like marginal so losses resemble text statistics
+        u = rng.random((self.local_batch, self.seq_len + 1))
+        toks = np.minimum(
+            (self.vocab * u ** 2.2).astype(np.int64), self.vocab - 1
+        ).astype(np.int32)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+class StoreTokens:
+    """Packed-token reader over a chunked ArrayStore (one doc row per chunk)."""
+
+    def __init__(self, root: str, seq_len: int, local_batch: int, *, seed: int = 0):
+        self.store = ArrayStore.open(root)
+        self.seq_len = seq_len
+        self.local_batch = local_batch
+        self.n_rows = self.store.shape[0]
+        self.row_len = self.store.shape[1]
+        assert self.row_len >= seq_len + 1
+        self.seed = seed
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, step]))
+        rows = rng.integers(0, self.n_rows, size=self.local_batch)
+        offs = rng.integers(0, self.row_len - self.seq_len - 1 + 1, size=self.local_batch)
+        out = np.empty((self.local_batch, self.seq_len + 1), np.int32)
+        for i, (r, o) in enumerate(zip(rows, offs)):
+            out[i] = self.store.read_slice(
+                (slice(int(r), int(r) + 1), slice(int(o), int(o) + self.seq_len + 1))
+            )[0]
+        return {"tokens": out[:, :-1], "targets": out[:, 1:]}

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: flash attention forward (online softmax).
+
+TPU adaptation notes: the memory hierarchy target is HBM -> VMEM tiles of
+(block_q x d) / (block_k x d); the S x S score matrix is never materialized
+(the O(S^2) memory term is what blocks 32k-prefill on 16 GB v5e chips — see
+EXPERIMENTS.md §Perf). The kv loop is the innermost grid dim so the MXU sees
+back-to-back (block_q x d) @ (d x block_k) matmuls with running-max/sum
+rescaling in f32 VMEM scratch (vs. warp-level shuffles in GPU flash
+implementations — the reduction here is a vector-lane op, which Mosaic maps
+onto the VPU).
+
+Grid: (batch*heads, sq // block_q, sk // block_k), kv innermost.
+GQA is handled in the BlockSpec index maps (kv head = q head // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, sq: int, sk: int, block_q: int, block_k: int
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)  # [bk, d]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kpos < sk  # tail padding mask
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + (sk - sq)
+        valid = jnp.logical_and(valid, kpos <= qpos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [bq, 1]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.maximum(l, 1e-30)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "scale", "block_q", "block_k", "interpret", "true_sq", "true_sk"
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    true_sq: int | None = None,
+    true_sk: int | None = None,
+) -> jax.Array:
+    """q: [b, h, sq, d]; k/v: [b, kvh, sk, d]. sq/sk padded to block multiples
+    by the ops.py wrapper; ``true_sq``/``true_sk`` are the unpadded lengths —
+    padded tail keys are masked to NEG_INF, padded query rows are garbage and
+    sliced off by the wrapper.
+    """
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    true_sq = sq if true_sq is None else true_sq
+    true_sk = sk if true_sk is None else true_sk
+    assert h % kvh == 0
+    group = h // kvh
+    if scale is None:
+        scale = d ** -0.5
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+
+    grid = (b * h, sq // block_q, sk // block_k)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, d), lambda bh, qi, ki: (bh // h, bh % h, qi, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, block_k, d), lambda bh, qi, ki: (bh // h, (bh % h) // group, ki, 0)
+    )
+    o_spec = q_spec
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=float(scale),
+        causal=causal,
+        sq=true_sq,
+        sk=true_sk,
+        block_q=block_q,
+        block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, d), jnp.float32),
+            _vmem((block_q, 1), jnp.float32),
+            _vmem((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

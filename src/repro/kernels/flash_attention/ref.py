@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: dense softmax attention with GQA and causal masking."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """q: [b, h, sq, d]; k/v: [b, kvh, sk, d] with h % kvh == 0.
+
+    Causal convention for sq != sk: the last query attends to the last key
+    (query i sees keys j with j <= i + sk - sq).
+    Returns [b, h, sq, d] in q's dtype; softmax in f32.
+    """
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    if h != kvh:
+        k = jnp.repeat(k, h // kvh, axis=1)
+        v = jnp.repeat(v, h // kvh, axis=1)
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(q.dtype), v)

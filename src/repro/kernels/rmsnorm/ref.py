@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """x: [..., d]; w: [d]. f32 statistics, output in x.dtype.
+    Uses the (1 + w) gemma-style convention when w is zero-initialized is
+    NOT applied here — plain ``x_hat * w``; callers add 1 where needed."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)

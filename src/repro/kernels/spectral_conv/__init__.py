@@ -1,0 +1,2 @@
+from repro.kernels.spectral_conv.ops import spectral_apply  # noqa: F401
+from repro.kernels.spectral_conv.ref import spectral_apply_ref  # noqa: F401

@@ -1,0 +1,61 @@
+"""jit'd public wrapper for the spectral convolution.
+
+Dispatches between the pure-XLA reference (used on CPU and in AOT dry-runs)
+and the Pallas TPU kernel (validated in interpret mode on CPU). The wrapper
+owns layout: flattening mode dims to K, splitting complex into re/im planes,
+and padding K to the kernel's block size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spectral_conv.kernel import spectral_apply_pallas
+from repro.kernels.spectral_conv.ref import spectral_apply_ref
+
+
+def spectral_apply(
+    xf: jax.Array,
+    w: jax.Array,
+    *,
+    use_pallas: bool = False,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """xf: [b, ci, *modes] complex; w: [ci, co, *modes] complex.
+
+    Returns [b, co, *modes] complex.
+    """
+    if not use_pallas:
+        return spectral_apply_ref(xf, w)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    b, ci, *modes = xf.shape
+    co = w.shape[1]
+    k = 1
+    for m in modes:
+        k *= int(m)
+
+    # [b, ci, K] -> [K, b, ci]; [ci, co, K] -> [K, ci, co]
+    x2 = jnp.moveaxis(xf.reshape(b, ci, k), -1, 0)
+    w2 = jnp.moveaxis(w.reshape(ci, co, k), -1, 0)
+
+    pad = (-k) % block_k
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0), (0, 0)))
+        w2 = jnp.pad(w2, ((0, pad), (0, 0), (0, 0)))
+
+    yr, yi = spectral_apply_pallas(
+        jnp.real(x2).astype(jnp.float32),
+        jnp.imag(x2).astype(jnp.float32),
+        jnp.real(w2).astype(jnp.float32),
+        jnp.imag(w2).astype(jnp.float32),
+        block_k=block_k,
+        interpret=interpret,
+    )
+    y = yr + 1j * yi
+    if pad:
+        y = y[:k]
+    return jnp.moveaxis(y, 0, -1).reshape(b, co, *modes)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the spectral convolution (per-mode channel mixing).
+
+Y[b, co, K] = sum_ci X[b, ci, K] * W[ci, co, K]   (complex), where K ranges
+over the kept Fourier modes (possibly multi-dimensional, flattened or not).
+This is the FLOP hot spot of the paper's FNO block (Alg. 2 line 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spectral_apply_ref(xf: jax.Array, w: jax.Array) -> jax.Array:
+    """xf: [b, ci, *modes] complex; w: [ci, co, *modes] complex.
+
+    Returns [b, co, *modes] complex. Element-wise over mode dims, contracted
+    over ci (paper's einsum Y_{b c_o k...} = X_{b c_i k...} W_{c_i c_o k...}).
+    """
+    n_modes = xf.ndim - 2
+    mode_axes = "".join(chr(ord("s") + i) for i in range(n_modes))
+    eq = f"bi{mode_axes},io{mode_axes}->bo{mode_axes}"
+    return jnp.einsum(eq, xf, w)

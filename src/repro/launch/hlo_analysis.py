@@ -1,0 +1,326 @@
+"""Post-optimization HLO analysis: collective bytes for the roofline.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so we parse ``compiled.as_text()``: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction contributes
+wire bytes per device according to standard ring-algorithm cost models.
+
+Collectives inside while loops (the scan-over-layers body, grad-accum loop,
+kv-chunk scans) execute trip-count times; we recover trip counts from each
+while's condition computation (XLA canonicalizes induction compares against
+a constant), falling back to 1 when unparseable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+# e.g. "%all-reduce.5 = f32[8,16]{1,0} all-reduce(" or tuple results
+_OP_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[\w\[\]{},\s]*?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\("
+)
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_DEF_RE = re.compile(r"^%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},.]+))")
+_HEADER_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([\w\[\],]+)")
+_DOT_RE = re.compile(
+    r"=\s*(?P<result>[\w\[\]{},.]+)\s+dot\(%?(?P<lhs>[\w.\-]+),\s*%?(?P<rhs>[\w.\-]+)\)"
+    r".*?lhs_contracting_dims=\{(?P<lcd>[\d,]*)\}"
+)
+_FFT_RE = re.compile(r"=\s*(?P<result>[\w\[\]{},.]+)\s+fft\(.*?fft_length=\{(?P<len>[\d,]+)\}")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONST_RE = re.compile(r"=\s*[su]32\[\]\s*constant\((\d+)\)")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(result):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    """Per-device bytes on the wire (ring-algorithm model)."""
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if kind == "all-gather":
+        return result_bytes * frac          # receives (g-1)/g of the output
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * frac    # reduce-scatter + all-gather
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)       # result is the scattered shard
+    if kind == "all-to-all":
+        return result_bytes * frac          # sends (g-1)/g of its tile
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    bytes_by_site: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    def top_sites(self, n: int = 10):
+        return sorted(self.bytes_by_site.items(), key=lambda kv: -kv[1])[:n]
+
+    def to_dict(self) -> dict:
+        return {
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+            "total_bytes": self.total_bytes,
+            "top_sites": self.top_sites(8),
+        }
+
+
+def _site_of(line: str) -> str:
+    m = _OPNAME_RE.search(line)
+    if not m:
+        return "?"
+    # keep a compact, meaningful tail of the op path
+    parts = m.group(1).split("/")
+    return "/".join(parts[-3:])[:120]
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and ("->" in line) and stripped.endswith("{"):
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if stripped == "}":
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = []
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Execution-count multiplier per computation: while-loop bodies run
+    trip-count times; fusion/reduce bodies run as often as their caller."""
+    mult = defaultdict(lambda: 1.0)
+    pending = []  # (parent, child, factor)
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                pending.append((cname, cond, 1))
+                pending.append((cname, body, trips))
+                continue
+            c = _CALLS_RE.search(line)
+            if c:
+                pending.append((cname, c.group(1), 1))
+    for _ in range(16):
+        changed = False
+        for parent, child, factor in pending:
+            new = mult[parent] * factor
+            if mult[child] != new:
+                mult[child] = new
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _comp_shapes(comps: Dict[str, List[str]], headers: Dict[str, str]) -> Dict[str, Dict[str, str]]:
+    """Per-computation map: instruction/param name -> result type string."""
+    shapes: Dict[str, Dict[str, str]] = {}
+    for cname, lines in comps.items():
+        local = {}
+        header = headers.get(cname, "")
+        if "(" in header:
+            arglist = header[header.index("(") + 1 :]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(arglist):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            for pm in _HEADER_PARAM_RE.finditer(arglist[:end]):
+                local[pm.group(1)] = pm.group(2)
+        for line in lines:
+            line = line.lstrip("ROOT ").strip()
+            dm = _DEF_RE.match(line)
+            if dm:
+                local[dm.group(1)] = dm.group(2)
+        shapes[cname] = local
+    return shapes
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str or "")
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def collect_compute(hlo: str) -> Dict[str, float]:
+    """Loop-aware FLOPs and rough HBM-traffic estimate.
+
+    XLA's ``cost_analysis()`` counts while bodies ONCE; here every dot/fft
+    inside a loop body is weighted by the loop trip count (recovered from
+    the while condition), and fusion bodies inherit their caller's count.
+    flops: dot = 2*prod(result)*K; fft = 5*N*log2(L).
+    bytes_est: every materialized result written once + read once (x2),
+    weighted by execution count — an upper-bound traffic model.
+    """
+    comps, headers = _split_computations_with_headers(hlo)
+    mult = _multipliers(comps)
+    shapes = _comp_shapes(comps, headers)
+    flops = 0.0
+    bytes_est = 0.0
+    import math
+
+    for cname, lines in comps.items():
+        m = mult[cname]
+        local = shapes[cname]
+        is_fused = cname not in headers or "fused" in cname or "wrapped" in cname
+        for line in lines:
+            dm = _DOT_RE.search(line)
+            if dm:
+                res = _shape_dims(dm.group("result"))
+                lhs = _shape_dims(local.get(dm.group("lhs"), ""))
+                lcd = [int(i) for i in dm.group("lcd").split(",") if i]
+                k = 1
+                for i in lcd:
+                    if i < len(lhs):
+                        k *= lhs[i]
+                n = 1
+                for d in res:
+                    n *= d
+                flops += m * 2.0 * n * k
+                continue
+            fm = _FFT_RE.search(line)
+            if fm:
+                res = _shape_dims(fm.group("result"))
+                n = 1
+                for d in res:
+                    n *= d
+                ln = 1
+                for d in fm.group("len").split(","):
+                    ln *= int(d)
+                flops += m * 5.0 * n * max(math.log2(max(ln, 2)), 1.0)
+                continue
+        if not is_fused:
+            # traffic estimate over materialized (non-fusion-internal) results
+            for line in lines:
+                dm = _DEF_RE.match(line.lstrip("ROOT ").strip())
+                if dm:
+                    bytes_est += m * 2.0 * _shape_bytes(dm.group(2))
+    return {"flops": flops, "bytes_est": bytes_est}
+
+
+def _split_computations_with_headers(hlo: str):
+    comps: Dict[str, List[str]] = {}
+    headers: Dict[str, str] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and ("->" in line) and stripped.endswith("{"):
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                headers[current] = stripped
+                continue
+        if stripped == "}":
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps, headers
+
+
+def collect_collectives(hlo: str, n_devices_default: int = 1) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    mult = _multipliers(comps)
+    bytes_by_kind: Dict[str, float] = defaultdict(float)
+    count_by_kind: Dict[str, int] = defaultdict(int)
+    bytes_by_site: Dict[str, float] = defaultdict(float)
+    for cname, lines in comps.items():
+        m = mult[cname]
+        for line in lines:
+            om = _OP_RE.search(line)
+            if not om:
+                continue
+            kind = om.group("kind")
+            if om.group("start") is None and f"{kind}-done" in line:
+                continue  # avoid double counting async done halves
+            rb = _shape_bytes(om.group("result"))
+            g = _group_size(line, n_devices_default)
+            wire = m * _wire_bytes(kind, rb, g)
+            bytes_by_kind[kind] += wire
+            count_by_kind[kind] += int(m)
+            bytes_by_site[f"{kind}:{_site_of(line)}"] += wire
+    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind), dict(bytes_by_site))
+
+
+def peak_memory_bytes(memory_stats) -> int:
+    """Per-device live-memory estimate from CompiledMemoryStats."""
+    return int(
+        memory_stats.argument_size_in_bytes
+        + memory_stats.output_size_in_bytes
+        - memory_stats.alias_size_in_bytes
+        + memory_stats.temp_size_in_bytes
+    )

@@ -1,0 +1,25 @@
+"""Production mesh builders (functions, never module-level constants, so
+importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+from repro.common.constants import (
+    MULTIPOD_MESH_AXES,
+    MULTIPOD_MESH_SHAPE,
+    POD_MESH_AXES,
+    POD_MESH_SHAPE,
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTIPOD_MESH_SHAPE if multi_pod else POD_MESH_SHAPE
+    axes = MULTIPOD_MESH_AXES if multi_pod else POD_MESH_AXES
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def dp_axes_for(mesh) -> tuple:
+    """Data-parallel axes: every axis that is not the model axis."""
+    return tuple(a for a in mesh.axis_names if a != "model")

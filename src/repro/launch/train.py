@@ -1,0 +1,166 @@
+"""End-to-end training driver (CPU-sized by default; mesh-ready).
+
+Two modes:
+  fno — train the paper's FNO surrogate on simulated data (from a chunked
+        ArrayStore produced by the cloud datagen layer, or synthetic);
+  lm  — train a reduced-config assigned architecture on synthetic tokens.
+
+Fault tolerance is on by default: periodic sharded checkpoints, restart
+from the latest on crash (--inject-fault demonstrates it), straggler
+watchdog. ``--devices N`` spawns N host devices for a real data-parallel
+mesh on CPU.
+"""
+import os
+import sys
+
+if "--devices" in sys.argv:  # must precede any jax import
+    n = sys.argv[sys.argv.index("--devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core import FNOConfig, fno_forward, init_params, mse_loss
+from repro.models import init_lm_params, lm_loss
+from repro.models.policy import LOCAL
+from repro.train import AdamWConfig, init_opt_state, make_train_step, warmup_cosine
+from repro.train.fault import FaultInjector, run_supervised
+
+
+def fno_batch_iter(x_all, y_all, batch):
+    def it(step):
+        n = x_all.shape[0]
+        idx = [(step * batch + j) % n for j in range(batch)]
+        return {"x": x_all[np.asarray(idx)], "y": y_all[np.asarray(idx)]}
+
+    return it
+
+
+def synthetic_fno_data(cfg: FNOConfig, n: int, seed: int = 0):
+    """Band-limited random fields (stand-in when no simulated store given)."""
+    key = jax.random.PRNGKey(seed)
+    nx, ny, nz, nt = cfg.grid
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (n, cfg.in_channels, nx, ny, nz, nt), jnp.float32)
+    # target: smoothed nonlinear transform (learnable mapping)
+    y = jnp.tanh(jnp.roll(x, 1, axis=2) + 0.5 * jnp.roll(x, 2, axis=3)) * 0.5
+    return np.asarray(x), np.asarray(y[:, : cfg.out_channels])
+
+
+def load_store_data(x_store_dir, y_store_dir):
+    from repro.data.store import ArrayStore
+
+    xs = ArrayStore.open(x_store_dir)
+    ys = ArrayStore.open(y_store_dir)
+    n = xs.n_complete()
+    x = np.stack([xs.read_chunk((i,) + (0,) * (len(xs.shape) - 1))[0] for i in range(n)])
+    y = np.stack([ys.read_chunk((i,) + (0,) * (len(ys.shape) - 1))[0] for i in range(n)])
+    if x.ndim == len(xs.shape) - 1 + 1:
+        x = x[:, None]  # add channel dim
+    if x.ndim == 5:
+        x = x[:, None]
+    if y.ndim == 5:
+        y = y[:, None]
+    return x.astype(np.float32), y.astype(np.float32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("fno", "lm"), default="fno")
+    ap.add_argument("--arch", default="gemma-7b", help="lm mode: assigned arch id")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--inject-fault", type=int, default=None, help="fail once at this step")
+    ap.add_argument("--x-store", default=None)
+    ap.add_argument("--y-store", default=None)
+    ap.add_argument("--grid", type=int, nargs=4, default=(16, 16, 8, 8))
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--n-data", type=int, default=16)
+    ap.add_argument("--devices", type=int, default=1)
+    args = ap.parse_args()
+
+    opt_cfg = AdamWConfig(
+        lr=warmup_cosine(args.lr, warmup=10, total=args.steps), weight_decay=0.0
+    )
+
+    if args.mode == "fno":
+        if args.x_store:
+            x_all, y_all = load_store_data(args.x_store, args.y_store)
+            grid = x_all.shape[-4:]
+        else:
+            grid = tuple(args.grid)
+            x_all = y_all = None
+        cfg = FNOConfig(
+            grid=grid,
+            modes=tuple(max(2, g // 4) for g in grid),
+            width=args.width,
+            n_blocks=4,
+            decoder_dim=32,
+        )
+        if x_all is None:
+            x_all, y_all = synthetic_fno_data(cfg, args.n_data)
+
+        def loss_fn(params, batch):
+            pred = fno_forward(params, batch["x"], cfg)
+            return mse_loss(pred, batch["y"]), {}
+
+        init_fn = functools.partial(init_params, cfg=cfg)
+        batches = fno_batch_iter(x_all, y_all, args.batch)
+    else:
+        cfg = reduced(get_arch(args.arch))
+        rng = np.random.default_rng(0)
+        tokens = rng.integers(0, cfg.vocab, size=(args.n_data, args.batch, 33), dtype=np.int32)
+
+        def loss_fn(params, batch):
+            loss, m = lm_loss(params, batch, cfg, LOCAL)
+            return loss, m
+
+        def batches(step):
+            t = tokens[step % args.n_data]
+            return {"tokens": jnp.asarray(t[:, :-1]), "targets": jnp.asarray(t[:, 1:])}
+
+        init_fn = functools.partial(init_lm_params, cfg=cfg)
+
+    step_fn = make_train_step(loss_fn, opt_cfg, grad_accum=args.grad_accum)
+    jit_step = jax.jit(step_fn)
+
+    def init_state():
+        params = init_fn(jax.random.PRNGKey(0))
+        return {"params": params, "opt": init_opt_state(params)}
+
+    def train_step(state, batch):
+        params, opt, metrics = jit_step(state["params"], state["opt"], batch)
+        return {"params": params, "opt": opt}, metrics
+
+    injector = FaultInjector([args.inject_fault]) if args.inject_fault is not None else None
+    result = run_supervised(
+        init_state=init_state,
+        train_step=train_step,
+        batch_iter=batches,
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        save_every=args.save_every,
+        injector=injector,
+        async_save=True,
+    )
+    first = result.metrics_log[0][1]["loss"] if result.metrics_log else float("nan")
+    last = result.metrics_log[-1][1]["loss"] if result.metrics_log else float("nan")
+    print(
+        f"done: steps={result.final_step} failures={result.failures} "
+        f"restores={result.restores} loss {first:.4f} -> {last:.4f} "
+        f"stragglers={len(result.straggler_steps)}"
+    )
+    return result
+
+
+if __name__ == "__main__":
+    main()

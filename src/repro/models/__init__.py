@@ -1,0 +1,19 @@
+"""LM architecture substrate (dense / MoE / SSM / hybrid / enc-dec)."""
+from repro.models.policy import LOCAL, ParallelPolicy  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    init_cache,
+    init_lm_params,
+    lm_decode_step,
+    lm_hidden,
+    lm_loss,
+    lm_prefill,
+    param_specs,
+)
+from repro.models.whisper import (  # noqa: F401
+    init_whisper_cache,
+    init_whisper_params,
+    whisper_decode_step,
+    whisper_loss,
+    whisper_param_specs,
+    whisper_prefill,
+)

@@ -1,0 +1,479 @@
+"""Attention variants: GQA/MQA/MHA, sliding-window, MLA, with KV caches.
+
+Layout conventions:
+  * residual stream x: [b, s, d]
+  * heads internally:  [b, h, s, hd] (kernel layout)
+  * KV cache:          {"k": [b, kvh, s_max, hd], "v": ...} + scalar length
+  * MLA cache:         {"ckv": [b, s_max, kv_lora], "kr": [b, s_max, dh_rope]}
+    (the compressed-latent cache — 576 floats/token instead of
+    2*h*hd = 4096 for an equivalent GQA cache; this is the decode-memory
+    optimization exploited in §Perf.)
+
+Prefill/train go through kernels.flash_attention (chunked online-softmax on
+XLA, Pallas kernel on TPU). Decode is a masked single-query attention over
+the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_chunked, flash_attention
+from repro.models import layers
+from repro.models.policy import ParallelPolicy, LOCAL
+
+
+# ---------------------------------------------------------------------------
+# Standard multi-head attention with GQA and optional sliding window.
+# ---------------------------------------------------------------------------
+
+def init_attn_params(key, cfg) -> dict:
+    d = cfg.d_model
+    hd = cfg.head_dim_
+    h, kvh = cfg.n_heads, cfg.kv_heads
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), jnp.float32) * std,
+        "wk": jax.random.normal(ks[1], (d, kvh * hd), jnp.float32) * std,
+        "wv": jax.random.normal(ks[2], (d, kvh * hd), jnp.float32) * std,
+        "wo": jax.random.normal(ks[3], (h * hd, d), jnp.float32) * std,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvh * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvh * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.kv_heads, hd)
+    v = v.reshape(b, s, cfg.kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    if cfg.rope_fraction > 0:
+        q = layers.apply_rope(q, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+        k = layers.apply_rope(k, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+    return q, k, v
+
+
+def _pad_heads(q, k, v, p_size: int):
+    """Zero-pad the head dim to a multiple of the model-axis size.
+
+    When n_heads %% P != 0 (qwen 40 on a 16-way axis, recurrentgemma 10),
+    the column-sharded qkv projections put shard boundaries INSIDE heads and
+    the SPMD partitioner emits involuntary all-reduces of attention logits
+    (measured 190+ GB/step wire — EXPERIMENTS §Perf hillclimb 3). Padded
+    heads have zero q/k/v, so their (sliced-away) outputs never contribute:
+    the transform is exact. kv heads are padded alongside only in the MHA
+    case (group structure must stay integral). Layout: [b, h, s, d].
+    """
+    h, kvh = q.shape[1], k.shape[1]
+    hp = -(-h // p_size) * p_size
+    if hp == h:
+        return q, k, v, h
+    q = jnp.pad(q, ((0, 0), (0, hp - h), (0, 0), (0, 0)))
+    if kvh == h:  # MHA: pad kv identically so group size stays 1
+        k = jnp.pad(k, ((0, 0), (0, hp - h), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, hp - h), (0, 0), (0, 0)))
+    elif hp % kvh:
+        raise ValueError(f"cannot pad heads {h}->{hp} with kv_heads {kvh}")
+    return q, k, v, h
+
+
+def attn_forward(
+    p: dict,
+    x: jax.Array,
+    cfg,
+    policy: ParallelPolicy = LOCAL,
+    *,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill without cache)."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    # kernel layout [b, h, s, hd]; heads sharded over the model axis
+    # (zero-padded up to a multiple of the axis when needed).
+    q, k, v = q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2)
+    if policy.distributed:
+        q, k, v, h_real = _pad_heads(q, k, v, policy.model_size())
+    else:
+        h_real = cfg.n_heads
+    q = policy.shard(q, policy.dp_axes, policy.model_axis, None, None)
+    k = policy.shard(k, policy.dp_axes, policy.model_axis, None, None)
+    v = policy.shard(v, policy.dp_axes, policy.model_axis, None, None)
+    if cfg.window is not None and s > cfg.window:
+        o = _windowed_attention(q, k, v, cfg.window)
+    else:
+        o = flash_attention(
+            q, k, v, causal=causal, use_pallas=policy.use_pallas,
+            chunk_k=min(1024, s),
+        )
+    o = o[:, :h_real].swapaxes(1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim_)
+    return o @ p["wo"].astype(x.dtype)
+
+
+def _windowed_attention(q, k, v, window: int):
+    """Sliding-window causal attention (recurrentgemma local layers).
+
+    Memory O(s * window): queries are processed in window-sized blocks, each
+    attending to its own and the previous key block (positions within the
+    window), never the full S x S matrix.
+    """
+    b, h, s, hd = q.shape
+    kvh = k.shape[1]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=1)
+        v = jnp.repeat(v, h // kvh, axis=1)
+    s_real = s
+    pad = (-s) % window
+    if pad:  # end-pad: padded keys are in every real query's future (masked)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nb = s // window
+    scale = hd ** -0.5
+    qb = q.reshape(b, h, nb, window, hd)
+    kb = k.reshape(b, h, nb, window, hd)
+    vb = v.reshape(b, h, nb, window, hd)
+    # previous block of keys/values (zeros for block 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :, :1]), kb[:, :, :-1]], axis=2)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :, :1]), vb[:, :, :-1]], axis=2)
+    kcat = jnp.concatenate([kprev, kb], axis=3)  # [b,h,nb,2w,hd]
+    vcat = jnp.concatenate([vprev, vb], axis=3)
+    logits = jnp.einsum("bhnqd,bhnkd->bhnqk", qb, kcat).astype(jnp.float32) * scale
+    qpos = jnp.arange(window)[:, None] + window  # position within the 2w slab
+    kpos = jnp.arange(2 * window)[None, :]
+    block = jnp.arange(nb)[:, None, None]
+    valid = (kpos <= qpos) & (kpos > qpos - window)
+    # block 0 has no previous keys
+    valid0 = valid & (kpos >= window)
+    mask = jnp.where(block == 0, valid0[None], valid[None])
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhnqk,bhnkd->bhnqd", w, vcat)
+    return o.reshape(b, h, s, hd)[:, :, :s_real]
+
+
+# -- decode -----------------------------------------------------------------
+
+TAIL_LEN = 64  # split-cache tail ring size (flushed to prefix every TAIL_LEN)
+
+
+def init_kv_cache(
+    cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *, split=False, quant=False
+) -> dict:
+    """Plain cache: one [b, kvh, S, hd] buffer per k/v.
+
+    split=True: prefix/tail layout for seq-sharded caches — the prefix is
+    READ-ONLY inside a decode step (so it can be sharded over the model axis
+    without dynamic-update-slice crossing shards, which forces XLA to
+    replicate the tensor), and appends go to a small replicated tail ring.
+    The serve engine flushes the tail into the prefix every TAIL_LEN steps.
+
+    quant=True (requires split): the prefix is stored int8 with per-token,
+    per-head max-abs scales (k_scale/v_scale, bf16) — halves decode HBM
+    residency (qwen-32B decode_32k: 21.5 -> 10.9 GiB/device, fitting a
+    single v5e pod). Scales fold into the logits / softmax weights, so the
+    attention dots still consume narrow dtypes.
+    """
+    hd = cfg.head_dim_
+    kvh = cfg.kv_heads
+    length = max_len if cfg.window is None else min(max_len, cfg.window)
+    kv_dtype = jnp.int8 if (quant and split and cfg.window is None) else dtype
+    cache = {
+        "k": jnp.zeros((batch, kvh, length, hd), kv_dtype),
+        "v": jnp.zeros((batch, kvh, length, hd), kv_dtype),
+    }
+    if kv_dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((batch, kvh, length), jnp.bfloat16)
+        cache["v_scale"] = jnp.zeros((batch, kvh, length), jnp.bfloat16)
+    if split and cfg.window is None:
+        cache["tk"] = jnp.zeros((batch, kvh, TAIL_LEN, hd), dtype)
+        cache["tv"] = jnp.zeros((batch, kvh, TAIL_LEN, hd), dtype)
+    return cache
+
+
+def quantize_kv(x: jax.Array):
+    """x: [b, kvh, s, hd] -> (int8 values, bf16 per-(token,head) scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def attn_decode(
+    p: dict,
+    x: jax.Array,          # [b, 1, d] current token's hidden state
+    cache: dict,
+    index: jax.Array,      # scalar int32: number of tokens already in cache
+    cfg,
+    policy: ParallelPolicy = LOCAL,
+):
+    """One decode step: append to cache, attend over valid prefix."""
+    b = x.shape[0]
+    hd = cfg.head_dim_
+    positions = jnp.full((b, 1), index, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if "tk" in cache:  # split prefix/tail cache (seq-sharded prefix)
+        return _attn_decode_split(p, x, q, k, v, cache, index, cfg, policy)
+    s_max = cache["k"].shape[2]
+    slot = index % s_max if cfg.window is not None else index
+    k_new = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.swapaxes(1, 2).astype(cache["k"].dtype), slot, axis=2
+    )
+    v_new = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.swapaxes(1, 2).astype(cache["v"].dtype), slot, axis=2
+    )
+    kpos = jnp.arange(s_max)
+    if cfg.window is not None:
+        valid = (kpos[None, :] <= slot) | (index >= s_max)
+    else:
+        valid = kpos[None, :] <= index
+    o = decode_attention(
+        q.swapaxes(1, 2), k_new, v_new, valid, policy=policy
+    )  # [b, h, 1, hd]
+    o = o.swapaxes(1, 2).reshape(b, 1, cfg.n_heads * hd)
+    out = o @ p["wo"].astype(x.dtype)
+    return out, {"k": k_new, "v": v_new}
+
+
+def _attn_decode_split(p, x, q, k, v, cache, index, cfg, policy):
+    """Decode against a read-only prefix + small tail ring.
+
+    The prefix is never written (alias-friendly, shardable along seq); the
+    new token's k/v go into the tail at slot = index - prefix_len. The
+    softmax is combined across the two segments flash-decode style: the
+    reductions over the sharded prefix seq dim become psums under SPMD.
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim_
+    prefix_len = cache["k"].shape[2]
+    slot = index - prefix_len
+    tk = jax.lax.dynamic_update_slice_in_dim(
+        cache["tk"], k.swapaxes(1, 2).astype(cache["tk"].dtype), slot, axis=2
+    )
+    tv = jax.lax.dynamic_update_slice_in_dim(
+        cache["tv"], v.swapaxes(1, 2).astype(cache["tv"].dtype), slot, axis=2
+    )
+    qh = q.swapaxes(1, 2)  # [b, h, 1, hd]
+    kvh = cfg.kv_heads
+    group = cfg.n_heads // kvh
+    # Keep cache operands in their storage dtype; accumulate in f32 via
+    # preferred_element_type — casting the cache would materialize a full
+    # f32 copy of the (huge) prefix.
+    quant = "k_scale" in cache
+    kv_compute = jnp.bfloat16 if quant else cache["k"].dtype
+    qg = qh.reshape(b, kvh, group, hd).astype(kv_compute)
+    scale = hd ** -0.5
+    f32 = jnp.float32
+    kp = cache["k"].astype(kv_compute) if quant else cache["k"]
+    vp = cache["v"].astype(kv_compute) if quant else cache["v"]
+    lp = jnp.einsum("bkgd,bksd->bkgs", qg, kp, preferred_element_type=f32) * scale
+    if quant:  # fold dequant scales into logits / softmax weights
+        lp = lp * cache["k_scale"].astype(f32)[:, :, None, :]
+    lt = jnp.einsum("bkgd,bktd->bkgt", qg.astype(tk.dtype), tk, preferred_element_type=f32) * scale
+    t_valid = jnp.arange(tk.shape[2])[None, :] <= slot
+    lt = jnp.where(t_valid[:, None, None, :], lt, -1e30)
+    m = jnp.maximum(
+        jnp.max(lp, axis=-1, keepdims=True), jnp.max(lt, axis=-1, keepdims=True)
+    )
+    wp = jnp.exp(lp - m)
+    wt = jnp.exp(lt - m)
+    denom = jnp.sum(wp, axis=-1, keepdims=True) + jnp.sum(wt, axis=-1, keepdims=True)
+    if quant:
+        wp = wp * cache["v_scale"].astype(f32)[:, :, None, :]
+    o = jnp.einsum("bkgs,bksd->bkgd", wp.astype(kv_compute), vp, preferred_element_type=f32)
+    o = o + jnp.einsum("bkgt,bktd->bkgd", wt.astype(tv.dtype), tv, preferred_element_type=f32)
+    o = (o / denom).reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    out = o @ p["wo"].astype(x.dtype)
+    new_cache = {"k": cache["k"], "v": cache["v"], "tk": tk, "tv": tv}
+    if quant:
+        new_cache["k_scale"] = cache["k_scale"]
+        new_cache["v_scale"] = cache["v_scale"]
+    return out, new_cache
+
+
+def flush_tail(cache: dict, prefix_valid: int):
+    """Merge the tail ring back into the prefix (engine-side, amortized).
+
+    Writes tail entries at positions [prefix_valid, prefix_valid+T) via a
+    static concat-roll (the prefix buffer must have room)."""
+    t = cache["tk"].shape[2]
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], cache["tk"], prefix_valid, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], cache["tv"], prefix_valid, axis=2)
+    return {
+        "k": k, "v": v,
+        "tk": jnp.zeros_like(cache["tk"]),
+        "tv": jnp.zeros_like(cache["tv"]),
+    }
+
+
+def decode_attention(q, k, v, valid, *, policy: ParallelPolicy = LOCAL):
+    """q: [b, h, 1, hd]; k/v: [b, kvh, s, hd]; valid: [b or 1, s] bool."""
+    b, h, _, hd = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, hd).astype(k.dtype)
+    logits = jnp.einsum(
+        "bkgd,bksd->bkgs", qg, k, preferred_element_type=jnp.float32
+    ) * (hd ** -0.5)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", w.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    return o.reshape(b, h, 1, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2). Decoupled RoPE: per-head
+# no-pe dims attend against latent up-projections; a shared rope head rides
+# alongside. Cache = compressed latent + shared rope key.
+# ---------------------------------------------------------------------------
+
+def init_mla_params(key, cfg) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * (m.dh_nope + m.dh_rope)), jnp.float32) * std,
+        "w_dkv": jax.random.normal(ks[1], (d, m.kv_lora + m.dh_rope), jnp.float32) * std,
+        "kv_norm": jnp.ones((m.kv_lora,), jnp.float32),
+        "k_up": jax.random.normal(ks[2], (m.kv_lora, h * m.dh_nope), jnp.float32) * (m.kv_lora ** -0.5),
+        "v_up": jax.random.normal(ks[3], (m.kv_lora, h * m.dh_v), jnp.float32) * (m.kv_lora ** -0.5),
+        "wo": jax.random.normal(ks[4], (h * m.dh_v, d), jnp.float32) * std,
+    }
+
+
+def _mla_qkr(p, x, cfg, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, m.dh_nope + m.dh_rope)
+    q_nope, q_rope = q[..., : m.dh_nope], q[..., m.dh_nope:]
+    q_rope = layers.apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    dkv = x @ p["w_dkv"].astype(x.dtype)
+    ckv, k_rope = dkv[..., : m.kv_lora], dkv[..., m.kv_lora:]
+    ckv = layers.rms_norm(ckv, p["kv_norm"])
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions, theta=cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_forward(p, x, cfg, policy: ParallelPolicy = LOCAL, *, positions=None):
+    """Full-sequence MLA (train / prefill): materialize per-head k/v."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope, ckv, k_rope = _mla_qkr(p, x, cfg, positions)
+    k_nope = (ckv @ p["k_up"].astype(x.dtype)).reshape(b, s, h, m.dh_nope)
+    v = (ckv @ p["v_up"].astype(x.dtype)).reshape(b, s, h, m.dh_v)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, m.dh_rope))], axis=-1)
+    scale = (m.dh_nope + m.dh_rope) ** -0.5
+    # pad v head dim up to q/k head dim for the shared kernel, slice after
+    o = flash_attention(
+        q.swapaxes(1, 2), k.swapaxes(1, 2),
+        jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, q.shape[-1] - m.dh_v))).swapaxes(1, 2),
+        causal=True, scale=scale, use_pallas=policy.use_pallas, chunk_k=min(1024, s),
+    ).swapaxes(1, 2)[..., : m.dh_v]
+    return o.reshape(b, s, h * m.dh_v) @ p["wo"].astype(x.dtype)
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *, split=False) -> dict:
+    m = cfg.mla
+    cache = {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora), dtype),
+        "kr": jnp.zeros((batch, max_len, m.dh_rope), dtype),
+    }
+    if split:
+        cache["tckv"] = jnp.zeros((batch, TAIL_LEN, m.kv_lora), dtype)
+        cache["tkr"] = jnp.zeros((batch, TAIL_LEN, m.dh_rope), dtype)
+    return cache
+
+
+def mla_decode(p, x, cache, index, cfg, policy: ParallelPolicy = LOCAL):
+    """Absorbed-projection decode: attention runs in the latent space, so the
+    per-token cache cost is kv_lora + dh_rope (576) regardless of heads.
+    Split caches keep the prefix read-only (seq-shardable) and append to a
+    small tail ring, combining the two segments flash-decode style."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((b, 1), index, jnp.int32)
+    q_nope, q_rope, ckv, k_rope = _mla_qkr(p, x, cfg, positions)
+    scale = (m.dh_nope + m.dh_rope) ** -0.5
+    # Absorb k_up into q: q_lat[b,h,L] = q_nope[b,h,dn] @ k_up[L, h, dn]^T
+    k_up = p["k_up"].reshape(m.kv_lora, h, m.dh_nope)
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32), k_up.astype(jnp.float32))
+    qr = q_rope[:, 0].astype(jnp.float32)
+
+    f32 = jnp.float32
+
+    def seg_logits(ckv_seg, kr_seg):
+        lg = jnp.einsum("bhl,bsl->bhs", q_lat.astype(ckv_seg.dtype), ckv_seg, preferred_element_type=f32)
+        lg += jnp.einsum("bhr,bsr->bhs", qr.astype(kr_seg.dtype), kr_seg, preferred_element_type=f32)
+        return lg * scale
+
+    if "tckv" in cache:
+        prefix_len = cache["ckv"].shape[1]
+        slot = index - prefix_len
+        tckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["tckv"], ckv.astype(cache["tckv"].dtype), slot, axis=1
+        )
+        tkr = jax.lax.dynamic_update_slice_in_dim(
+            cache["tkr"], k_rope.astype(cache["tkr"].dtype), slot, axis=1
+        )
+        lp = seg_logits(cache["ckv"], cache["kr"])
+        lt = seg_logits(tckv, tkr)
+        t_valid = jnp.arange(tckv.shape[1])[None, :] <= slot
+        lt = jnp.where(t_valid[:, None, :], lt, -1e30)
+        mx = jnp.maximum(jnp.max(lp, -1, keepdims=True), jnp.max(lt, -1, keepdims=True))
+        wp, wt = jnp.exp(lp - mx), jnp.exp(lt - mx)
+        denom = jnp.sum(wp, -1, keepdims=True) + jnp.sum(wt, -1, keepdims=True)
+        o_lat = jnp.einsum("bhs,bsl->bhl", wp.astype(cache["ckv"].dtype), cache["ckv"], preferred_element_type=f32)
+        o_lat += jnp.einsum("bht,btl->bhl", wt.astype(tckv.dtype), tckv, preferred_element_type=f32)
+        o_lat = o_lat / denom
+        new_cache = {"ckv": cache["ckv"], "kr": cache["kr"], "tckv": tckv, "tkr": tkr}
+    else:
+        ckv_new = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), index, axis=1
+        )
+        kr_new = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), index, axis=1
+        )
+        logits = seg_logits(ckv_new, kr_new)
+        valid = jnp.arange(cache["ckv"].shape[1])[None, :] <= index
+        logits = jnp.where(valid[:, None, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhs,bsl->bhl", w, ckv_new.astype(jnp.float32))
+        new_cache = {"ckv": ckv_new, "kr": kr_new}
+
+    v_up = p["v_up"].reshape(m.kv_lora, h, m.dh_v)
+    o = jnp.einsum("bhl,lhv->bhv", o_lat, v_up.astype(jnp.float32))
+    o = o.reshape(b, 1, h * m.dh_v).astype(x.dtype)
+    out = o @ p["wo"].astype(x.dtype)
+    return out, new_cache

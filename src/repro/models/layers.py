@@ -1,0 +1,138 @@
+"""Shared LM layers: norms, RoPE, embeddings, MLPs, chunked cross-entropy."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_op
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, *, eps=1e-6, use_pallas=False, plus_one=False):
+    if plus_one:  # gemma convention: weight stored as (w - 1)
+        w = 1.0 + w.astype(jnp.float32)
+    return rmsnorm_op(x, w, eps=eps, use_pallas=use_pallas)
+
+
+def layer_norm(x, w, b, *, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * w + b
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (GPT-NeoX convention; optional partial fraction
+# as in ChatGLM's 2D-RoPE-descended scheme which rotates half the head dim).
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, fraction: float = 1.0):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, *, theta=10000.0, fraction=1.0):
+    """x: [b, s, h, d]; positions: [s] or [b, s] token positions."""
+    d = x.shape[-1]
+    inv, rot = rope_frequencies(d, theta, fraction)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [b, s, rot/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(table, tokens, *, scale_by_sqrt_dim=False):
+    """table: [V, D]; tokens: int [b, s] -> [b, s, D]."""
+    x = jnp.take(table, tokens, axis=0)
+    if scale_by_sqrt_dim:
+        x = x * jnp.asarray(table.shape[-1] ** 0.5, x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def glu_mlp(x, w_gate, w_up, w_down, *, act: str = "swiglu"):
+    """Gated MLP: swiglu (silu gate) or geglu (tanh-gelu gate, gemma)."""
+    g = x @ w_gate.astype(x.dtype)
+    u = x @ w_up.astype(x.dtype)
+    if act == "swiglu":
+        g = jax.nn.silu(g)
+    elif act == "geglu":
+        g = jax.nn.gelu(g, approximate=True)
+    else:
+        raise ValueError(act)
+    return (g * u) @ w_down.astype(x.dtype)
+
+
+def gelu_mlp(x, w1, b1, w2, b2, *, act: str = "gelu"):
+    h = x @ w1.astype(x.dtype) + b1.astype(x.dtype)
+    if act == "gelu":
+        h = jax.nn.gelu(h, approximate=False)
+    elif act == "relu2":  # nemotron/minitron squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    return h @ w2.astype(x.dtype) + b2.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy.
+#
+# Never materializes [B, S, V] logits: scans the sequence in chunks, so peak
+# logit memory is B*chunk*V (sharded over the model axis on the vocab dim).
+# This is the memory-roofline fix that makes 256k-vocab archs (gemma,
+# minitron, recurrentgemma) trainable at seq 4k on 16 GB chips.
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(
+    h: jax.Array,           # [b, s, d] final hidden states
+    lm_head: jax.Array,     # [d, v]
+    targets: jax.Array,     # [b, s] int32
+    *,
+    chunk: int = 512,
+    policy=None,
+) -> jax.Array:
+    b, s, d = h.shape
+    v = lm_head.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, n, chunk), 1, 0)
+
+    def body(total, inp):
+        hx, tx = inp  # [b, chunk, d], [b, chunk]
+        logits = (hx @ lm_head.astype(hx.dtype)).astype(jnp.float32)
+        if policy is not None:
+            logits = policy.shard(logits, policy.dp_axes, None, policy.model_axis)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tx[..., None], axis=-1)[..., 0]
+        return total + jnp.sum(lse - tgt), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    return total / (b * s)
+
+
+def logits_last(h_last: jax.Array, lm_head: jax.Array) -> jax.Array:
+    """Decode-time logits for the last position only. h_last: [b, d]."""
+    return (h_last @ lm_head.astype(h_last.dtype)).astype(jnp.float32)

@@ -1,0 +1,234 @@
+"""Mixture-of-Experts with expert-parallel all-to-all dispatch.
+
+The EP dispatch is the paper's repartition primitive applied to the expert
+dimension: tokens are scattered into per-expert capacity buffers locally,
+then a single all-to-all moves each expert's buffer to its owning device
+(exactly R_{token-shard -> expert-shard}), expert FFNs run locally, and the
+adjoint all-to-all brings results home. No [T, E, C] one-hot tensor is ever
+materialized — routing positions come from a cumsum over a [T, E] mask, so
+the approach scales to 32k sequences.
+
+DeepSeek specifics supported: shared experts (dense FFN alongside routed),
+fine-grained experts, optional top-k renormalization, first-layer dense,
+and the standard load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.policy import ParallelPolicy, LOCAL
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int          # per-expert FFN width
+    n_shared: int = 0      # shared ("always-on") experts, deepseek-style
+    first_dense_ff: int = 0  # layer-0 dense FFN width (0 = layer 0 is MoE too)
+    norm_topk: bool = False
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.001
+
+
+def init_moe_params(key, d_model: int, moe: MoEConfig) -> dict:
+    ks = jax.random.split(key, 7)
+    e, f = moe.n_experts, moe.d_expert
+    std_d = d_model ** -0.5
+    std_f = f ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d_model, e), jnp.float32) * std_d,
+        "w_gate": jax.random.normal(ks[1], (e, d_model, f), jnp.float32) * std_d,
+        "w_up": jax.random.normal(ks[2], (e, d_model, f), jnp.float32) * std_d,
+        "w_down": jax.random.normal(ks[3], (e, f, d_model), jnp.float32) * std_f,
+    }
+    if moe.n_shared:
+        fs = moe.n_shared * f
+        p["shared"] = {
+            "w_gate": jax.random.normal(ks[4], (d_model, fs), jnp.float32) * std_d,
+            "w_up": jax.random.normal(ks[5], (d_model, fs), jnp.float32) * std_d,
+            "w_down": jax.random.normal(ks[6], (fs, d_model), jnp.float32) * (fs ** -0.5),
+        }
+    return p
+
+
+def moe_param_specs(moe: MoEConfig, model_axis: str = "model") -> dict:
+    p = {
+        "router": P(),
+        "w_gate": P(model_axis, None, None),
+        "w_up": P(model_axis, None, None),
+        "w_down": P(model_axis, None, None),
+    }
+    if moe.n_shared:
+        p["shared"] = {
+            "w_gate": P(None, model_axis),
+            "w_up": P(None, model_axis),
+            "w_down": P(model_axis, None),
+        }
+    return p
+
+
+def _route(x_flat: jax.Array, router_w: jax.Array, moe: MoEConfig):
+    """x_flat: [T, D] -> (top idx [T,k], top weights [T,k], probs [T,E])."""
+    logits = (x_flat @ router_w.astype(x_flat.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, moe.top_k)
+    if moe.norm_topk:
+        topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+    return topi, topv.astype(x_flat.dtype), probs
+
+
+def _aux_stats(topi: jax.Array, probs: jax.Array, moe: MoEConfig):
+    """Per-shard sufficient statistics for the load-balance loss."""
+    e = moe.n_experts
+    counts = jnp.sum(jax.nn.one_hot(topi, e, dtype=jnp.float32), axis=(0, 1))
+    prob_sum = jnp.sum(probs, axis=0)
+    n = jnp.asarray(probs.shape[0], jnp.float32)
+    return counts, prob_sum, n
+
+
+def _aux_from_stats(counts, prob_sum, n, moe: MoEConfig) -> jax.Array:
+    """GShard/switch load-balance loss: E * sum_e f_e * P_e (global stats,
+    so sharded and unsharded paths agree exactly)."""
+    f = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    p = prob_sum / jnp.maximum(n, 1.0)
+    return moe.n_experts * jnp.sum(f * p)
+
+
+def _aux_loss(topi: jax.Array, probs: jax.Array, moe: MoEConfig) -> jax.Array:
+    return _aux_from_stats(*_aux_stats(topi, probs, moe), moe)
+
+
+def _dispatch(x_flat, topi, topv, capacity: int, n_experts: int):
+    """Scatter tokens into per-expert capacity buffers.
+
+    Returns (buf [E, C, D], entry_expert [T*k], entry_pos [T*k], keep [T*k]).
+    Position-in-expert comes from an exclusive cumsum over the [T*k, E]
+    assignment mask (f32 accumulation is exact for counts < 2^24).
+    """
+    t, k = topi.shape
+    d = x_flat.shape[-1]
+    e_flat = topi.reshape(-1)  # [T*k] routing entries in token-major order
+    onehot = jax.nn.one_hot(e_flat, n_experts, dtype=jnp.float32)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=-1).astype(jnp.int32)
+    keep = pos < capacity
+    slot = jnp.where(keep, e_flat * capacity + pos, n_experts * capacity)
+    tokens_rep = jnp.repeat(x_flat, k, axis=0)  # [T*k, D]
+    buf = jnp.zeros((n_experts * capacity + 1, d), x_flat.dtype)
+    buf = buf.at[slot].set(tokens_rep)
+    return buf[:-1].reshape(n_experts, capacity, d), e_flat, pos, keep
+
+
+def _combine(y_buf, e_flat, pos, keep, topv, t: int, capacity: int):
+    """Gather expert outputs back to tokens and mix with router weights."""
+    k = topv.shape[-1]
+    d = y_buf.shape[-1]
+    slot = jnp.where(keep, e_flat * capacity + pos, 0)
+    gathered = y_buf.reshape(-1, d)[slot]  # [T*k, D]
+    w = (topv.reshape(-1) * keep).astype(gathered.dtype)
+    return jnp.sum((gathered * w[:, None]).reshape(t, k, d), axis=1)
+
+
+def _expert_ffn(buf, w_gate, w_up, w_down):
+    """buf: [E_local, C, D]; weights: [E_local, ...]."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(buf.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(buf.dtype))
+    return jnp.einsum("ecf,efd->ecd", g * u, w_down.astype(buf.dtype))
+
+
+def _capacity(t: int, moe: MoEConfig) -> int:
+    """Statistical capacity for large token counts; dropless floor for small
+    ones (decode batches route few tokens — a collision on one expert must
+    not drop, or decode diverges from prefill)."""
+    statistical = math.ceil(t * moe.top_k / moe.n_experts * moe.capacity_factor)
+    return max(1, statistical, min(t, 128))
+
+
+def _moe_local(params, x, moe: MoEConfig):
+    """Single-shard routed-experts pass. x: [b, s, d] (local)."""
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    topi, topv, probs = _route(x_flat, params["router"], moe)
+    cap = _capacity(x_flat.shape[0], moe)
+    buf, e_flat, pos, keep = _dispatch(x_flat, topi, topv, cap, moe.n_experts)
+    y_buf = _expert_ffn(buf, params["w_gate"], params["w_up"], params["w_down"])
+    y = _combine(y_buf, e_flat, pos, keep, topv, x_flat.shape[0], cap)
+    return y.reshape(b, s, d), _aux_loss(topi, probs, moe)
+
+
+def _moe_ep_shard(params, x, moe: MoEConfig, model_axis: str, all_axes):
+    """Expert-parallel pass inside shard_map; x is the LOCAL token shard.
+
+    all-to-all #1: [E, C, D] -> [E/P, P*C, D] (experts home);
+    all-to-all #2: adjoint, results back to token owners.
+    """
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    topi, topv, probs = _route(x_flat, params["router"], moe)
+    cap = _capacity(x_flat.shape[0], moe)
+    buf, e_flat, pos, keep = _dispatch(x_flat, topi, topv, cap, moe.n_experts)
+    buf = jax.lax.all_to_all(buf, model_axis, split_axis=0, concat_axis=1, tiled=True)
+    y_buf = _expert_ffn(buf, params["w_gate"], params["w_up"], params["w_down"])
+    y_buf = jax.lax.all_to_all(y_buf, model_axis, split_axis=1, concat_axis=0, tiled=True)
+    y = _combine(y_buf, e_flat, pos, keep, topv, x_flat.shape[0], cap)
+    # aux loss from GLOBAL routing statistics (psum of per-shard counts),
+    # so it equals the single-shard computation exactly
+    counts, prob_sum, n = _aux_stats(topi, probs, moe)
+    counts = jax.lax.psum(counts, all_axes)
+    prob_sum = jax.lax.psum(prob_sum, all_axes)
+    n = jax.lax.psum(n, all_axes)
+    aux = _aux_from_stats(counts, prob_sum, n, moe)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,
+    moe: MoEConfig,
+    policy: ParallelPolicy = LOCAL,
+) -> Tuple[jax.Array, jax.Array]:
+    """Routed experts (+ shared experts). x: [b, s, d] global.
+
+    Returns (y, aux_loss). Distributed path requires s % P == 0; decode
+    (s == 1) and smoke tests use the local path under plain pjit.
+    """
+    b, s, d = x.shape
+    p_size = policy.model_size()
+    use_a2a = (
+        policy.distributed and policy.moe_a2a and s % p_size == 0 and p_size > 1
+        and moe.n_experts % p_size == 0
+    )
+    if use_a2a:
+        mesh = policy.mesh
+        dp, mx = policy.dp_axes, policy.model_axis
+        x = policy.shard(x, dp, mx, None)
+        specs = {
+            "router": P(),
+            "w_gate": P(mx, None, None),
+            "w_up": P(mx, None, None),
+            "w_down": P(mx, None, None),
+        }
+        routed = {k: params[k] for k in specs}
+        all_axes = tuple(a for grp in (dp, (mx,)) for a in (grp if isinstance(grp, tuple) else (grp,)))
+        y, aux = jax.shard_map(
+            lambda pr, xx: _moe_ep_shard(pr, xx, moe, mx, all_axes),
+            mesh=mesh,
+            in_specs=(specs, P(dp, mx, None)),
+            out_specs=(P(dp, mx, None), P()),
+            check_vma=False,
+        )(routed, x)
+        y = policy.shard_act(y)
+    else:
+        y, aux = _moe_local(params, x, moe)
+
+    if "shared" in params:
+        sh = params["shared"]
+        y = y + layers.glu_mlp(x, sh["w_gate"], sh["w_up"], sh["w_down"], act="swiglu")
+    return y, aux * moe.aux_coef

@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) + decode state.
+
+Block: two input projections; one branch goes conv1d -> RG-LRU, the other is
+a GeLU gate; elementwise product, then output projection. The RG-LRU diag
+recurrence  h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t)  with
+a_t = exp(-c * softplus(L) * r_t) is computed with an associative scan
+(log-depth; XLA maps it onto tree reductions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+RGLRU_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_rnn: int = 0          # 0 -> same as d_model
+    conv_kernel: int = 4
+
+    def width(self, d_model: int) -> int:
+        return self.d_rnn or d_model
+
+
+def init_rglru_params(key, d_model: int, cfg: RGLRUConfig) -> dict:
+    w = cfg.width(d_model)
+    ks = jax.random.split(key, 6)
+    std = d_model ** -0.5
+    # Lambda init so a^(1/c) ~ U[0.9, 0.999] as in the Griffin paper.
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))  # softplus^-1(-log u)
+    return {
+        "w_x": jax.random.normal(ks[0], (d_model, w), jnp.float32) * std,
+        "w_gate": jax.random.normal(ks[1], (d_model, w), jnp.float32) * std,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_kernel, w), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_r": jax.random.normal(ks[3], (w, w), jnp.float32) * w ** -0.5,
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "w_i": jax.random.normal(ks[5], (w, w), jnp.float32) * w ** -0.5,
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lambda": lam,
+        "w_out": jax.random.normal(ks[0], (w, d_model), jnp.float32) * w ** -0.5,
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def _rglru_scan(x, r, i, lam):
+    """x/r/i: [b, s, w] f32. Returns h: [b, s, w]."""
+    log_a = -RGLRU_C * jax.nn.softplus(lam) * r  # [b,s,w], negative
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h
+
+
+def rglru_forward(params: dict, x: jax.Array, cfg: RGLRUConfig, d_model: int) -> jax.Array:
+    """x: [b, s, d] -> [b, s, d]."""
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype), approximate=True)
+    u = x @ params["w_x"].astype(x.dtype)
+    u = _causal_conv(u, params["conv_w"], params["conv_b"])
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_r"] + params["b_r"])
+    i = jax.nn.sigmoid(uf @ params["w_i"] + params["b_i"])
+    h = _rglru_scan(uf, r, i, params["lambda"]).astype(x.dtype)
+    return (h * gate) @ params["w_out"].astype(x.dtype)
+
+
+def init_rglru_cache(d_model: int, cfg: RGLRUConfig, batch: int, dtype=jnp.float32) -> dict:
+    w = cfg.width(d_model)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel, w), dtype),
+        "h": jnp.zeros((batch, w), dtype),
+    }
+
+
+def rglru_decode(
+    params: dict, x: jax.Array, cache: dict, cfg: RGLRUConfig, d_model: int
+) -> Tuple[jax.Array, dict]:
+    """x: [b, 1, d]."""
+    gate = jax.nn.gelu(x[:, 0] @ params["w_gate"].astype(x.dtype), approximate=True)
+    u = x[:, 0] @ params["w_x"].astype(x.dtype)
+    conv = jnp.concatenate([cache["conv"][:, 1:], u[:, None].astype(cache["conv"].dtype)], axis=1)
+    u = jnp.einsum("bkc,kc->bc", conv.astype(jnp.float32), params["conv_w"]) + params["conv_b"]
+    r = jax.nn.sigmoid(u @ params["w_r"] + params["b_r"])
+    i = jax.nn.sigmoid(u @ params["w_i"] + params["b_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    h = a * cache["h"] + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) * (i * u)
+    y = (h.astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    return y[:, None], {"conv": conv, "h": h}

@@ -1,0 +1,244 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked matmul scan + decode.
+
+TPU adaptation: the SSD chunked algorithm is chosen over a pure recurrent
+scan because its intra-chunk work is (chunk x N) x (N x chunk) matmuls —
+MXU food — while the O(S) recurrence only runs over S/chunk chunk-states.
+Decode keeps the O(1) recurrent state, which is why mamba2 is the arch that
+makes the long_500k cell feasible.
+
+Sharding note: projections are stored SPLIT (w_z/w_x/w_B/w_C/w_dt instead of
+one fused in_proj) so each output can be column-sharded over the model axis
+without slicing a sharded dim (slices of sharded dims force XLA reshards).
+The depthwise conv factorizes exactly over the x/B/C split.
+
+Shapes per Mamba-2 defaults: d_inner = expand*d_model, heads H = d_inner /
+head_dim, state N = d_state, shared B/C across heads (n_groups=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.policy import ParallelPolicy, LOCAL
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 128
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+    def conv_dim(self, d_model: int) -> int:
+        return self.d_inner(d_model) + 2 * self.n_groups * self.d_state
+
+
+def init_ssm_params(key, d_model: int, ssm: SSMConfig) -> dict:
+    di = ssm.d_inner(d_model)
+    h = ssm.n_heads(d_model)
+    gn = ssm.n_groups * ssm.d_state
+    ks = jax.random.split(key, 8)
+    std = d_model ** -0.5
+    return {
+        "w_z": jax.random.normal(ks[0], (d_model, di), jnp.float32) * std,
+        "w_x": jax.random.normal(ks[1], (d_model, di), jnp.float32) * std,
+        "w_B": jax.random.normal(ks[2], (d_model, gn), jnp.float32) * std,
+        "w_C": jax.random.normal(ks[3], (d_model, gn), jnp.float32) * std,
+        "w_dt": jax.random.normal(ks[4], (d_model, h), jnp.float32) * std,
+        "conv_x": jax.random.normal(ks[5], (ssm.conv_kernel, di), jnp.float32) * 0.1,
+        "conv_B": jax.random.normal(ks[6], (ssm.conv_kernel, gn), jnp.float32) * 0.1,
+        "conv_C": jax.random.normal(ks[7], (ssm.conv_kernel, gn), jnp.float32) * 0.1,
+        "conv_bx": jnp.zeros((di,), jnp.float32),
+        "conv_bB": jnp.zeros((gn,), jnp.float32),
+        "conv_bC": jnp.zeros((gn,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))),  # softplus^-1(0.01)
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d_model), jnp.float32) * di ** -0.5,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [b, s, c]; w: [k, c]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k)
+    )
+    return out + b.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk: int, *, return_state=False):
+    """SSD scan. x: [b,s,h,p]; dt: [b,s,h] (post-softplus); a_log: [h];
+    b_mat/c_mat: [b,s,n] (group-shared). Returns y [b,s,h,p] f32
+    (+ final state [b,h,n,p] if return_state).
+    Recurrence: h_t = exp(dt_t*A) h_{t-1} + dt_t * B_t (x) x_t; y_t = C_t . h_t
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [h], negative
+    da = dt.astype(jnp.float32) * a  # [b,s,h]
+    xf = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]  # discretized
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+
+    da_c = da.reshape(bsz, nc, chunk, h)
+    cs = jnp.cumsum(da_c, axis=2)  # inclusive within-chunk
+    x_c = xf.reshape(bsz, nc, chunk, h, p)
+    b_c = bf.reshape(bsz, nc, chunk, n)
+    c_c = cf.reshape(bsz, nc, chunk, n)
+
+    # Intra-chunk: scores[i,j] = (C_i . B_j) * exp(cs_i - cs_j), j <= i.
+    scores = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)  # head-shared part
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # [b,c,i,j,h]
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tril[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, x_c)
+
+    # Chunk-final states: S[b,c,h,n,p] = sum_j B_j exp(cs_last - cs_j) x_j
+    d2e = jnp.exp(cs[:, :, -1:, :] - cs)  # decay to end [b,c,j,h]
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", b_c, d2e, x_c)
+
+    # Inter-chunk recurrence over chunk states.
+    total = jnp.exp(cs[:, :, -1, :])  # [b,c,h] full-chunk decay
+
+    def scan_fn(s_run, inp):
+        tot, s_c = inp
+        s_new = s_run * tot[:, :, None, None] + s_c
+        return s_new, s_run  # emit state BEFORE this chunk
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    s_last, s_prev = jax.lax.scan(
+        scan_fn, s0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(s_chunk, 1, 0))
+    )
+    s_prev = jnp.moveaxis(s_prev, 0, 1)  # [b,c,h,n,p]
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", c_c, s_prev, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    if return_state:
+        return y, s_last
+    return y
+
+
+def _project(params, x, di, gn):
+    z = x @ params["w_z"].astype(x.dtype)
+    xs = x @ params["w_x"].astype(x.dtype)
+    b_mat = x @ params["w_B"].astype(x.dtype)
+    c_mat = x @ params["w_C"].astype(x.dtype)
+    dt = x @ params["w_dt"].astype(x.dtype)
+    return z, xs, b_mat, c_mat, dt
+
+
+def ssm_forward(
+    params: dict, x: jax.Array, d_model: int, ssm: SSMConfig,
+    policy: ParallelPolicy = LOCAL, *, return_cache: bool = False,
+):
+    """Full-sequence Mamba-2 mixer. x: [b, s, d] -> [b, s, d]."""
+    b, s, _ = x.shape
+    di = ssm.d_inner(d_model)
+    h = ssm.n_heads(d_model)
+    gn = ssm.n_groups * ssm.d_state
+    z, xs, b_mat, c_mat, dt = _project(params, x, di, gn)
+    xs_pre = xs  # pre-conv stream, cached for decode
+    b_pre, c_pre = b_mat, c_mat
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x"], params["conv_bx"]))
+    b_mat = jax.nn.silu(_causal_conv(b_mat, params["conv_B"], params["conv_bB"]))
+    c_mat = jax.nn.silu(_causal_conv(c_mat, params["conv_C"], params["conv_bC"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    # pad the sequence to a chunk multiple with dt=0 steps: decay exp(0)=1
+    # and zero discretized input leave the recurrent state untouched, so
+    # return_state is exact; padded outputs are sliced off.
+    chunk = min(ssm.chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    out = ssd_chunked(
+        xs.reshape(b, s + pad, h, ssm.head_dim), dt, params["A_log"], b_mat, c_mat,
+        chunk, return_state=return_cache,
+    )
+    y, state = out if return_cache else (out, None)
+    if pad:
+        y = y[:, :s]
+        xs = xs[:, :s]
+    y = y + params["D"][None, None, :, None] * xs.reshape(b, s, h, ssm.head_dim).astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm_w"], use_pallas=policy.use_pallas)
+    y = y @ params["out_proj"].astype(x.dtype)
+    if return_cache:
+        k = ssm.conv_kernel
+        pad = max(0, k - s)
+
+        def last_k(a):
+            a = a[:, -k:]
+            if pad:
+                a = jnp.pad(a, ((0, 0), (pad, 0), (0, 0)))
+            return a
+
+        conv_cache = jnp.concatenate(
+            [last_k(xs_pre), last_k(b_pre), last_k(c_pre)], axis=-1
+        ).astype(jnp.float32)
+        return y, {"conv": conv_cache, "state": state}
+    return y
+
+
+# -- decode -------------------------------------------------------------------
+
+def init_ssm_cache(d_model: int, ssm: SSMConfig, batch: int, dtype=jnp.float32) -> dict:
+    h = ssm.n_heads(d_model)
+    return {
+        "conv": jnp.zeros((batch, ssm.conv_kernel, ssm.conv_dim(d_model)), dtype),
+        "state": jnp.zeros((batch, h, ssm.d_state, ssm.head_dim), dtype),
+    }
+
+
+def ssm_decode(
+    params: dict, x: jax.Array, cache: dict, d_model: int, ssm: SSMConfig,
+    policy: ParallelPolicy = LOCAL,
+) -> Tuple[jax.Array, dict]:
+    """Single-token recurrent step. x: [b, 1, d]."""
+    b = x.shape[0]
+    di = ssm.d_inner(d_model)
+    h = ssm.n_heads(d_model)
+    gn = ssm.n_groups * ssm.d_state
+    z, xs, b_mat, c_mat, dt = _project(params, x[:, 0], di, gn)
+    # rolling conv state over the concatenated (x | B | C) pre-conv stream
+    new_col = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+    conv = jnp.concatenate(
+        [cache["conv"][:, 1:], new_col[:, None].astype(cache["conv"].dtype)], axis=1
+    )
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_B"], params["conv_C"]], axis=1)
+    conv_b = jnp.concatenate([params["conv_bx"], params["conv_bB"], params["conv_bC"]])
+    mixed = jnp.einsum("bkc,kc->bc", conv.astype(jnp.float32), conv_w) + conv_b
+    mixed = jax.nn.silu(mixed).astype(x.dtype)
+    xs, b_mat, c_mat = jnp.split(mixed, [di, di + gn], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [b,h]
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a)  # [b,h]
+    xh = xs.reshape(b, h, ssm.head_dim).astype(jnp.float32) * dt[..., None]
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", b_mat.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c_mat.astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * xs.reshape(b, h, ssm.head_dim).astype(jnp.float32)
+    y = y.reshape(b, di).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm_w"], use_pallas=policy.use_pallas)
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None]
+    return out, {"conv": conv, "state": state}

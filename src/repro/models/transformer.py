@@ -1,0 +1,703 @@
+"""Decoder-LM engine: dense / MoE / SSM / hybrid families.
+
+One functional implementation drives all decoder-only assigned archs:
+  * ``init_lm_params``  — stacked per-layer params (scan-over-layers keeps
+    the HLO compact: one layer body + loop, critical for 512-device AOT
+    compiles of 64-layer models);
+  * ``lm_loss``         — training forward + chunked cross-entropy;
+  * ``lm_prefill``      — full-sequence forward that also emits the serve
+    cache (KV / MLA-latent / SSM-state / window ring, per family);
+  * ``lm_decode_step``  — one-token step over the stacked cache;
+  * ``param_specs``     — PartitionSpecs for every parameter (TP over the
+    ``model`` axis; specs auto-replicate non-divisible dims).
+
+Whisper (encdec family) lives in models/whisper.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_lib
+from repro.models import layers, moe as moe_lib, rglru as rglru_lib, ssm as ssm_lib
+from repro.models.policy import ParallelPolicy, LOCAL
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, d_model: int, d_ff: int, act: str) -> dict:
+    ks = jax.random.split(key, 3)
+    std_d, std_f = d_model ** -0.5, d_ff ** -0.5
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": jax.random.normal(ks[0], (d_model, d_ff), jnp.float32) * std_d,
+            "w_up": jax.random.normal(ks[1], (d_model, d_ff), jnp.float32) * std_d,
+            "w_down": jax.random.normal(ks[2], (d_ff, d_model), jnp.float32) * std_f,
+        }
+    return {
+        "w1": jax.random.normal(ks[0], (d_model, d_ff), jnp.float32) * std_d,
+        "b1": jnp.zeros((d_ff,), jnp.float32),
+        "w2": jax.random.normal(ks[1], (d_ff, d_model), jnp.float32) * std_f,
+        "b2": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def _init_layer(key, cfg, kind: str) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"ln1": jnp.ones((d,), jnp.float32)}
+    if kind == "ssm":
+        p["mixer"] = ssm_lib.init_ssm_params(ks[0], d, cfg.ssm)
+        return p
+    if kind == "rec":
+        p["mixer"] = rglru_lib.init_rglru_params(ks[0], d, cfg.rglru)
+        p["ln2"] = jnp.ones((d,), jnp.float32)
+        p["mlp"] = _init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_act)
+        return p
+    # attention-bearing layers
+    if cfg.mla is not None:
+        p["attn"] = attn_lib.init_mla_params(ks[0], cfg)
+    else:
+        p["attn"] = attn_lib.init_attn_params(ks[0], cfg)
+    p["ln2"] = jnp.ones((d,), jnp.float32)
+    if kind == "moe":
+        p["moe"] = moe_lib.init_moe_params(ks[1], d, cfg.moe)
+    elif kind == "dense0":
+        p["mlp"] = _init_mlp(ks[1], d, cfg.moe.first_dense_ff, cfg.mlp_act)
+    else:
+        p["mlp"] = _init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_act)
+    return p
+
+
+def init_lm_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    v, d = cfg.vocab, cfg.d_model
+    params = {
+        "embed": jax.random.normal(ks[0], (v, d), jnp.float32) * d ** -0.5,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": jax.random.normal(ks[1], (d, v), jnp.float32) * d ** -0.5,
+    }
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        n_super = cfg.n_layers // len(pat)
+        tail = cfg.n_layers - n_super * len(pat)
+        sb_keys = jax.random.split(ks[2], n_super)
+
+        def init_super(k):
+            kk = jax.random.split(k, len(pat))
+            return {f"b{i}_{kind}": _init_layer(kk[i], cfg, kind) for i, kind in enumerate(pat)}
+
+        params["superblocks"] = jax.vmap(init_super)(sb_keys)
+        tk = jax.random.split(ks[3], max(tail, 1))
+        params["tail"] = [
+            _init_layer(tk[i], cfg, pat[i % len(pat)]) for i in range(tail)
+        ]
+        return params
+    if kinds and kinds[0] == "dense0":
+        params["layer0"] = _init_layer(ks[2], cfg, "dense0")
+        rest = kinds[1:]
+    else:
+        params["layer0"] = None
+        rest = kinds
+    layer_keys = jax.random.split(ks[4], len(rest))
+    params["layers"] = jax.vmap(lambda k: _init_layer(k, cfg, rest[0]))(layer_keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Param partition specs (TP over the model axis).
+# ---------------------------------------------------------------------------
+
+def _mlp_specs(act: str, mx: str) -> dict:
+    if act in ("swiglu", "geglu"):
+        return {"w_gate": P(None, mx), "w_up": P(None, mx), "w_down": P(mx, None)}
+    return {"w1": P(None, mx), "b1": P(mx), "w2": P(mx, None), "b2": P()}
+
+
+def _layer_specs(cfg, kind: str, mx: str) -> dict:
+    s = {"ln1": P()}
+    if kind == "ssm":
+        s["mixer"] = {
+            "w_z": P(None, mx), "w_x": P(None, mx), "w_B": P(), "w_C": P(),
+            "w_dt": P(), "conv_x": P(None, mx), "conv_B": P(), "conv_C": P(),
+            "conv_bx": P(mx), "conv_bB": P(), "conv_bC": P(),
+            "A_log": P(), "D": P(), "dt_bias": P(), "norm_w": P(mx),
+            "out_proj": P(mx, None),
+        }
+        return s
+    if kind == "rec":
+        # RG-LRU mixers are REPLICATED (pure data parallelism): the
+        # recurrence is elementwise over the width dim, but TP-sharding the
+        # square gate matmuls forces an all-reduce of f32 activations per
+        # layer (measured 80+ GB/step wire on the 16x16 mesh — see
+        # EXPERIMENTS §Perf hillclimb 2). The mixers are small (~39 M
+        # params/layer), so replication + ZeRO-1 moments is the better
+        # trade; the adjacent MLPs stay TP-sharded.
+        s["mixer"] = {
+            "w_x": P(), "w_gate": P(),
+            "conv_w": P(), "conv_b": P(),
+            "w_r": P(), "b_r": P(), "w_i": P(), "b_i": P(),
+            "lambda": P(), "w_out": P(),
+        }
+        s["ln2"] = P()
+        s["mlp"] = _mlp_specs(cfg.mlp_act, mx)
+        return s
+    if cfg.mla is not None:
+        s["attn"] = {
+            "wq": P(None, mx), "w_dkv": P(None, None), "kv_norm": P(),
+            "k_up": P(None, mx), "v_up": P(None, mx), "wo": P(mx, None),
+        }
+    else:
+        a = {"wq": P(None, mx), "wk": P(None, mx), "wv": P(None, mx), "wo": P(mx, None)}
+        if cfg.qkv_bias:
+            a.update({"bq": P(mx), "bk": P(mx), "bv": P(mx)})
+        if cfg.qk_norm:
+            a.update({"q_norm": P(), "k_norm": P()})
+        s["attn"] = a
+    s["ln2"] = P()
+    if kind == "moe":
+        s["moe"] = moe_lib.moe_param_specs(cfg.moe, mx)
+    else:
+        s["mlp"] = _mlp_specs(cfg.mlp_act, mx)
+    return s
+
+
+def _stack_specs(spec_tree):
+    """Prefix every leaf spec with None for the stacked layer dim."""
+    return jax.tree.map(
+        lambda p: P(None, *p), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def param_specs(cfg, policy: ParallelPolicy) -> dict:
+    mx = policy.model_axis
+    v = cfg.vocab
+    p_model = policy.model_size()
+    head_spec = P(None, mx) if v % p_model == 0 else P(None, None)
+    specs = {
+        "embed": P(None, mx) if cfg.d_model % p_model == 0 else P(None, None),
+        "final_norm": P(),
+        "lm_head": head_spec,
+    }
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        n_super = cfg.n_layers // len(pat)
+        tail = cfg.n_layers - n_super * len(pat)
+        sb = {
+            f"b{i}_{kind}": _layer_specs(cfg, kind, mx) for i, kind in enumerate(pat)
+        }
+        specs["superblocks"] = _stack_specs(sb)
+        specs["tail"] = [_layer_specs(cfg, pat[i % len(pat)], mx) for i in range(tail)]
+        return specs
+    if kinds and kinds[0] == "dense0":
+        specs["layer0"] = _layer_specs(cfg, "dense0", mx)
+        rest_kind = kinds[1]
+    else:
+        specs["layer0"] = None
+        rest_kind = kinds[0]
+    specs["layers"] = _stack_specs(_layer_specs(cfg, rest_kind, mx))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _norm(x, w, cfg, policy):
+    if cfg.norm == "ln":
+        return layers.layer_norm(x, w, jnp.zeros_like(w), eps=cfg.norm_eps)
+    return layers.rms_norm(x, w, eps=cfg.norm_eps, use_pallas=policy.use_pallas)
+
+
+def _apply_layer(x, lp, kind, cfg, policy, positions):
+    """One transformer block; returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(x, lp["ln1"], cfg, policy)
+    if kind == "ssm":
+        x = x + ssm_lib.ssm_forward(lp["mixer"], h, cfg.d_model, cfg.ssm, policy)
+        return policy.shard_act(x), aux
+    if kind == "rec":
+        x = x + rglru_lib.rglru_forward(lp["mixer"], h, cfg.rglru, cfg.d_model)
+    elif cfg.mla is not None:
+        x = x + attn_lib.mla_forward(lp["attn"], h, cfg, policy, positions=positions)
+    else:
+        x = x + attn_lib.attn_forward(lp["attn"], h, cfg, policy, positions=positions)
+    x = policy.shard_act(x)
+    h = _norm(x, lp["ln2"], cfg, policy)
+    if kind == "moe":
+        y, aux = moe_lib.moe_apply(lp["moe"], h, cfg.moe, policy)
+        x = x + y
+    elif cfg.mlp_act in ("swiglu", "geglu"):
+        x = x + layers.glu_mlp(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"], act=cfg.mlp_act)
+    else:
+        x = x + layers.gelu_mlp(h, lp["mlp"]["w1"], lp["mlp"]["b1"], lp["mlp"]["w2"], lp["mlp"]["b2"], act=cfg.mlp_act)
+    return policy.shard_act(x), aux
+
+
+def _remat(body, policy):
+    if not policy.remat:
+        return body
+    if policy.remat_policy == "dots":
+        return jax.checkpoint(body, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(body)
+
+
+def _embed_in(params, tokens, cfg, policy):
+    x = layers.embed(params["embed"], tokens, scale_by_sqrt_dim=cfg.embed_scale)
+    x = x.astype(cfg.activation_dtype)
+    return policy.shard_act(x)
+
+
+def lm_hidden(params, tokens, cfg, policy: ParallelPolicy = LOCAL):
+    """Token ids -> final-norm hidden states [b, s, d]; returns (h, aux)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = _embed_in(params, tokens, cfg, policy)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+
+        def super_body(carry, sb):
+            x, aux = carry
+            for i, kind in enumerate(pat):
+                x, a = _apply_layer(x, sb[f"b{i}_{kind}"], kind, cfg, policy, positions)
+                aux = aux + a
+            return (x, aux), None
+
+        body = _remat(super_body, policy)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["superblocks"])
+        for i, lp in enumerate(params["tail"]):
+            x, a = _apply_layer(x, lp, pat[i % len(pat)], cfg, policy, positions)
+            aux_total = aux_total + a
+    else:
+        kinds = cfg.layer_kinds()
+        if params.get("layer0") is not None:
+            x, a = _apply_layer(x, params["layer0"], "dense0", cfg, policy, positions)
+            aux_total = aux_total + a
+            rest_kind = kinds[1]
+        else:
+            rest_kind = kinds[0]
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _apply_layer(x, lp, rest_kind, cfg, policy, positions)
+            return (x, aux + a), None
+
+        body = _remat(body, policy)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+
+    h = _norm(x, params["final_norm"], cfg, policy)
+    return h, aux_total
+
+
+def lm_loss(params, batch: dict, cfg, policy: ParallelPolicy = LOCAL):
+    """Training loss. batch: {"tokens": [b,s], "targets": [b,s]}."""
+    h, aux = lm_hidden(params, batch["tokens"], cfg, policy)
+    xent = layers.chunked_cross_entropy(
+        h, params["lm_head"], batch["targets"], policy=policy if policy.distributed else None
+    )
+    return xent + aux, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode over stacked caches.
+# ---------------------------------------------------------------------------
+
+def use_split_cache(cfg, policy: ParallelPolicy) -> bool:
+    """Split prefix/tail caches for all distributed attention decode: the
+    big prefix stays READ-ONLY per step (flows through the layer scan as an
+    xs input — no per-layer output copy, no DUS across sharded dims) and
+    appends go to a small replicated tail ring flushed by the engine."""
+    return policy.distributed and cfg.window is None
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, policy: ParallelPolicy = LOCAL):
+    """Build the zeroed, stacked cache pytree for this family."""
+    split = use_split_cache(cfg, policy)
+
+    def one(kind):
+        if kind == "ssm":
+            return ssm_lib.init_ssm_cache(cfg.d_model, cfg.ssm, batch)
+        if kind == "rec":
+            return rglru_lib.init_rglru_cache(cfg.d_model, cfg.rglru, batch)
+        if cfg.mla is not None:
+            return attn_lib.init_mla_cache(cfg, batch, max_len, dtype, split=split)
+        return attn_lib.init_kv_cache(
+            cfg, batch, max_len, dtype, split=split, quant=policy.kv_quant
+        )
+
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        n_super = cfg.n_layers // len(pat)
+        tail = cfg.n_layers - n_super * len(pat)
+        stack = lambda tree, n: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), tree
+        )
+        return {
+            "superblocks": {
+                f"b{i}_{kind}": stack(one(kind), n_super) for i, kind in enumerate(pat)
+            },
+            "tail": [one(pat[i % len(pat)]) for i in range(tail)],
+        }
+    if kinds and kinds[0] == "dense0":
+        rest = len(kinds) - 1
+        return {
+            "layer0": one("attn"),
+            "layers": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (rest,) + a.shape).copy(), one(kinds[1])
+            ),
+        }
+    n = len(kinds)
+    return {
+        "layer0": None,
+        "layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one(kinds[0])
+        ),
+    }
+
+
+def cache_specs(cfg, policy: ParallelPolicy):
+    """PartitionSpec tree matching ``init_cache`` (stacked layer dim first).
+
+    KV heads shard over the model axis when divisible; batch over dp axes
+    (dropped automatically at use when the cell's batch is not divisible).
+    """
+    mx = policy.model_axis
+    dp = policy.dp_axes
+    p_size = policy.model_size()
+
+    def attn_spec():
+        if cfg.kv_heads % p_size == 0:
+            s = P(dp, mx, None, None)  # head-sharded prefix
+            sc = P(dp, mx, None)
+        else:
+            # Domain decomposition over the cache's sequence dim (the
+            # paper's insight applied to decode): each model shard owns a
+            # contiguous read-only KV chunk; softmax combine is a psum.
+            s = P(dp, None, mx, None)
+            sc = P(dp, None, mx)
+        if use_split_cache(cfg, policy):
+            t = P(dp, None, None, None)
+            spec = {"k": s, "v": s, "tk": t, "tv": t}
+            if policy.kv_quant:
+                spec["k_scale"] = sc
+                spec["v_scale"] = sc
+            return spec
+        return {"k": s, "v": s}
+
+    def mla_spec():
+        s = {"ckv": P(dp, mx, None), "kr": P(dp, mx, None)}  # seq-sharded prefix
+        if use_split_cache(cfg, policy):
+            s["tckv"] = P(dp, None, None)
+            s["tkr"] = P(dp, None, None)
+        return s
+
+    def ssm_spec():
+        h = cfg.ssm.n_heads(cfg.d_model)
+        return {
+            "conv": P(dp, None, None),
+            "state": P(dp, mx if h % p_size == 0 else None, None, None),
+        }
+
+    def rec_spec():
+        w = cfg.rglru.width(cfg.d_model)
+        return {
+            "conv": P(dp, None, mx if w % p_size == 0 else None),
+            "h": P(dp, mx if w % p_size == 0 else None),
+        }
+
+    def one(kind):
+        if kind == "ssm":
+            return ssm_spec()
+        if kind == "rec":
+            return rec_spec()
+        if cfg.mla is not None:
+            return mla_spec()
+        return attn_spec()
+
+    def stacked(tree):
+        return jax.tree.map(
+            lambda p: P(None, *p), tree, is_leaf=lambda x: isinstance(x, P)
+        )
+
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        n_super = cfg.n_layers // len(pat)
+        tail = cfg.n_layers - n_super * len(pat)
+        return {
+            "superblocks": {
+                f"b{i}_{kind}": stacked(one(kind)) for i, kind in enumerate(pat)
+            },
+            "tail": [one(pat[i % len(pat)]) for i in range(tail)],
+        }
+    if kinds and kinds[0] == "dense0":
+        return {"layer0": one("attn"), "layers": stacked(one(kinds[1]))}
+    return {"layer0": None, "layers": stacked(one(kinds[0]))}
+
+
+def cache_batch_axes(cache):
+    """Pytree of ints: which axis of each cache leaf is the batch/slot dim.
+    Stacked per-layer subtrees ('layers', 'superblocks') put the layer dim
+    first, so batch is axis 1 there; unstacked leaves have batch at 0."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    axes = []
+    for path, _ in flat:
+        keys = [getattr(p, "key", None) for p in path]
+        axes.append(1 if ("layers" in keys or "superblocks" in keys) else 0)
+    return jax.tree_util.tree_unflatten(treedef, axes)
+
+
+def _decode_layer(x, lp, cache, index, kind, cfg, policy):
+    h = _norm(x, lp["ln1"], cfg, policy)
+    if kind == "ssm":
+        y, new_cache = ssm_lib.ssm_decode(lp["mixer"], h, cache, cfg.d_model, cfg.ssm, policy)
+        return policy.shard_act(x + y), new_cache
+    if kind == "rec":
+        y, new_cache = rglru_lib.rglru_decode(lp["mixer"], h, cache, cfg.rglru, cfg.d_model)
+        x = x + y
+    elif cfg.mla is not None:
+        y, new_cache = attn_lib.mla_decode(lp["attn"], h, cache, index, cfg, policy)
+        x = x + y
+    else:
+        y, new_cache = attn_lib.attn_decode(lp["attn"], h, cache, index, cfg, policy)
+        x = x + y
+    h = _norm(x, lp["ln2"], cfg, policy)
+    if kind == "moe":
+        y, _ = moe_lib.moe_apply(lp["moe"], h, cfg.moe, policy)
+        x = x + y
+    elif cfg.mlp_act in ("swiglu", "geglu"):
+        x = x + layers.glu_mlp(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"], act=cfg.mlp_act)
+    else:
+        x = x + layers.gelu_mlp(h, lp["mlp"]["w1"], lp["mlp"]["b1"], lp["mlp"]["w2"], lp["mlp"]["b2"], act=cfg.mlp_act)
+    return policy.shard_act(x), new_cache
+
+
+def lm_decode_step(params, token, cache, index, cfg, policy: ParallelPolicy = LOCAL):
+    """One decode step. token: [b, 1] int32; index: scalar int32 (tokens so
+    far in cache). Returns (logits [b, vocab], new_cache)."""
+    x = _embed_in(params, token, cfg, policy)
+
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+
+        def super_body(x, inp):
+            sb, sb_cache = inp
+            new_caches = {}
+            for i, kind in enumerate(pat):
+                name = f"b{i}_{kind}"
+                x, nc = _decode_layer(x, sb[name], sb_cache[name], index, kind, cfg, policy)
+                new_caches[name] = nc
+            return x, new_caches
+
+        x, new_sb = jax.lax.scan(super_body, x, (params["superblocks"], cache["superblocks"]))
+        new_tail = []
+        for i, lp in enumerate(params["tail"]):
+            kind = pat[i % len(pat)]
+            x, nc = _decode_layer(x, lp, cache["tail"][i], index, kind, cfg, policy)
+            new_tail.append(nc)
+        new_cache = {"superblocks": new_sb, "tail": new_tail}
+    else:
+        kinds = cfg.layer_kinds()
+        new_cache = {"layer0": None}
+        if params.get("layer0") is not None:
+            x, nc0 = _decode_layer(x, params["layer0"], cache["layer0"], index, "dense0", cfg, policy)
+            new_cache["layer0"] = nc0
+            rest_kind = kinds[1]
+        else:
+            rest_kind = kinds[0]
+
+        layer_cache = cache["layers"]
+        tail_keys = [k for k in ("tk", "tv", "tckv", "tkr") if isinstance(layer_cache, dict) and k in layer_cache]
+
+        if policy.unroll_decode:
+            n = len(cfg.layer_kinds()) - (1 if params.get("layer0") is not None else 0)
+            outs = []
+            for i in range(n):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                # Joint barrier ties layer i's cache slice to the running
+                # residual: without it the per-layer slice converts depend
+                # only on the cache param, so the scheduler hoists ALL of
+                # them ahead of the layer chain and their buffers coexist
+                # (~n_layers x slice bytes of temp).
+                lc, x = jax.lax.optimization_barrier(
+                    (jax.tree.map(lambda a: a[i], layer_cache), x)
+                )
+                x, nc = _decode_layer(x, lp, lc, index, rest_kind, cfg, policy)
+                outs.append({k: nc[k] for k in tail_keys} if tail_keys else nc)
+            new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            def body(x, inp):
+                lp, lc = inp
+                x, nc = _decode_layer(x, lp, lc, index, rest_kind, cfg, policy)
+                if tail_keys:
+                    nc = {k: nc[k] for k in tail_keys}  # prefix is read-only xs
+                return x, nc
+
+            x, new_layers = jax.lax.scan(body, x, (params["layers"], layer_cache))
+        if tail_keys:
+            new_layers = {
+                **{k: v for k, v in layer_cache.items() if k not in tail_keys},
+                **new_layers,
+            }
+        new_cache["layers"] = new_layers
+
+    h = _norm(x, params["final_norm"], cfg, policy)
+    logits = layers.logits_last(h[:, 0], params["lm_head"])
+    return logits, new_cache
+
+
+def lm_prefill(params, tokens, cfg, policy: ParallelPolicy = LOCAL, max_len: Optional[int] = None):
+    """Process a prompt, returning (last-token logits, cache at len(prompt)).
+
+    The cache is sized to ``max_len`` (defaults to prompt length). Attention
+    caches hold the prompt's k/v; recurrent families hold final states.
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+    positions = jnp.arange(s)
+    x = _embed_in(params, tokens, cfg, policy)
+
+    def prefill_layer(x, lp, kind):
+        h = _norm(x, lp["ln1"], cfg, policy)
+        if kind == "ssm":
+            y, cache = ssm_lib.ssm_forward(lp["mixer"], h, cfg.d_model, cfg.ssm, policy, return_cache=True)
+            return policy.shard_act(x + y), cache
+        if kind == "rec":
+            y, cache = _rglru_prefill(lp["mixer"], h, cfg)
+            x = x + y
+        elif cfg.mla is not None:
+            y, cache = _mla_prefill(lp["attn"], h, cfg, policy, positions, max_len)
+            x = x + y
+        else:
+            y, cache = _attn_prefill(lp["attn"], h, cfg, policy, positions, max_len)
+            x = x + y
+        h = _norm(x, lp["ln2"], cfg, policy)
+        if kind == "moe":
+            y, _ = moe_lib.moe_apply(lp["moe"], h, cfg.moe, policy)
+            x = x + y
+        elif cfg.mlp_act in ("swiglu", "geglu"):
+            x = x + layers.glu_mlp(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"], act=cfg.mlp_act)
+        else:
+            x = x + layers.gelu_mlp(h, lp["mlp"]["w1"], lp["mlp"]["b1"], lp["mlp"]["w2"], lp["mlp"]["b2"], act=cfg.mlp_act)
+        return policy.shard_act(x), cache
+
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+
+        def super_body(x, sb):
+            caches = {}
+            for i, kind in enumerate(pat):
+                name = f"b{i}_{kind}"
+                x, caches[name] = prefill_layer(x, sb[name], kind)
+            return x, caches
+
+        x, sb_caches = jax.lax.scan(super_body, x, params["superblocks"])
+        tail_caches = []
+        for i, lp in enumerate(params["tail"]):
+            x, c = prefill_layer(x, lp, pat[i % len(pat)])
+            tail_caches.append(c)
+        cache = {"superblocks": sb_caches, "tail": tail_caches}
+    else:
+        kinds = cfg.layer_kinds()
+        cache = {"layer0": None}
+        if params.get("layer0") is not None:
+            x, c0 = prefill_layer(x, params["layer0"], "dense0")
+            cache["layer0"] = c0
+            rest_kind = kinds[1]
+        else:
+            rest_kind = kinds[0]
+
+        def body(x, lp):
+            return prefill_layer(x, lp, rest_kind)
+
+        x, layer_caches = jax.lax.scan(body, x, params["layers"])
+        cache["layers"] = layer_caches
+
+    h = _norm(x, params["final_norm"], cfg, policy)
+    logits = layers.logits_last(h[:, -1], params["lm_head"])
+    return logits, cache
+
+
+def _attn_prefill(p, h, cfg, policy, positions, max_len):
+    b, s, _ = h.shape
+    q, k, v = attn_lib._project_qkv(p, h, cfg, positions)
+    q = q.swapaxes(1, 2)
+    kt, vt = k.swapaxes(1, 2), v.swapaxes(1, 2)
+    if policy.distributed:
+        qp, kp, vp, h_real = attn_lib._pad_heads(q, kt, vt, policy.model_size())
+    else:
+        qp, kp, vp, h_real = q, kt, vt, cfg.n_heads
+    qp = policy.shard(qp, policy.dp_axes, policy.model_axis, None, None)
+    kp = policy.shard(kp, policy.dp_axes, policy.model_axis, None, None)
+    vp = policy.shard(vp, policy.dp_axes, policy.model_axis, None, None)
+    from repro.kernels.flash_attention import flash_attention
+    if cfg.window is not None and s > cfg.window:
+        o = attn_lib._windowed_attention(qp, kp, vp, cfg.window)
+    else:
+        o = flash_attention(qp, kp, vp, causal=True, use_pallas=policy.use_pallas, chunk_k=min(1024, s))
+    o = o[:, :h_real].swapaxes(1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim_)
+    out = o @ p["wo"].astype(h.dtype)
+    # cache
+    if cfg.window is not None:
+        w = min(cfg.window, max_len)
+        if s < w:
+            # short prompt: tokens already sit at ring slots 0..s-1
+            kc = jnp.pad(kt, ((0, 0), (0, 0), (0, w - s), (0, 0)))
+            vc = jnp.pad(vt, ((0, 0), (0, 0), (0, w - s), (0, 0)))
+        else:
+            kc, vc = kt[:, :, -w:], vt[:, :, -w:]
+            shift = s % w
+            kc = jnp.roll(kc, shift, axis=2)  # ring layout: slot = pos % window
+            vc = jnp.roll(vc, shift, axis=2)
+    else:
+        pad = max_len - s
+        kc = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    dtype = jnp.bfloat16 if h.dtype == jnp.bfloat16 else h.dtype
+    if use_split_cache(cfg, policy) and cfg.window is None:
+        tail = jnp.zeros((b, cfg.kv_heads, attn_lib.TAIL_LEN, cfg.head_dim_), dtype)
+        if policy.kv_quant:
+            kq, ks = attn_lib.quantize_kv(kc)
+            vq, vs = attn_lib.quantize_kv(vc)
+            return out, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs,
+                         "tk": tail, "tv": tail}
+        return out, {"k": kc.astype(dtype), "v": vc.astype(dtype), "tk": tail, "tv": tail}
+    return out, {"k": kc.astype(dtype), "v": vc.astype(dtype)}
+
+
+def _mla_prefill(p, h, cfg, policy, positions, max_len):
+    m = cfg.mla
+    b, s, _ = h.shape
+    out = attn_lib.mla_forward(p, h, cfg, policy, positions=positions)
+    q_nope, q_rope, ckv, k_rope = attn_lib._mla_qkr(p, h, cfg, positions)
+    pad = max_len - s
+    ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+    kr = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    return out, {"ckv": ckv.astype(jnp.bfloat16), "kr": kr.astype(jnp.bfloat16)}
+
+
+def _rglru_prefill(p, h, cfg):
+    out = rglru_lib.rglru_forward(p, h, cfg.rglru, cfg.d_model)
+    # recompute the final state cheaply for the cache
+    x = h
+    u = x @ p["w_x"].astype(x.dtype)
+    k = p["conv_w"].shape[0]
+    conv_cache = u[:, -k:].astype(jnp.float32)
+    if conv_cache.shape[1] < k:  # prompt shorter than the conv kernel
+        conv_cache = jnp.pad(conv_cache, ((0, 0), (k - conv_cache.shape[1], 0), (0, 0)))
+    u_conv = rglru_lib._causal_conv(u, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    r = jax.nn.sigmoid(u_conv @ p["w_r"] + p["b_r"])
+    i = jax.nn.sigmoid(u_conv @ p["w_i"] + p["b_i"])
+    hseq = rglru_lib._rglru_scan(u_conv, r, i, p["lambda"])
+    return out, {"conv": conv_cache, "h": hseq[:, -1]}

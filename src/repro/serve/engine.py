@@ -1,0 +1,145 @@
+"""Continuous-batching-lite serving engine.
+
+Slot-based scheduler over the family-generic decode step: a fixed pool of
+``max_batch`` slots, each holding one request's cache; new requests are
+admitted into free slots as soon as they open (no full-batch barrier —
+"continuous batching" a la Orca/vLLM, minus paging since our caches are
+dense per-slot). Per-slot sequence positions differ, so the decode step is
+vmapped over the slot dim with a per-slot index vector.
+
+Greedy sampling; EOS or max_tokens retires a slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf_lib
+from repro.models import whisper as wh_lib
+from repro.models.policy import LOCAL, ParallelPolicy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list          # token ids
+    max_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    length: int = 0
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        max_len: int = 128,
+        max_batch: int = 4,
+        policy: ParallelPolicy = LOCAL,
+    ):
+        if cfg.family == "encdec":
+            raise NotImplementedError("use whisper_* serving entry points")
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.max_len = max_len
+        self.slots: List[_Slot] = [_Slot() for _ in range(max_batch)]
+        # Cache with batch dim = slots (axis differs per subtree: stacked
+        # layer leaves carry it at axis 1).
+        self.cache = tf_lib.init_cache(cfg, max_batch, max_len, policy=policy)
+        self._axes = tf_lib.cache_batch_axes(self.cache)
+
+        axes = self._axes
+
+        def decode_one(params, token, cache_stripped, index):
+            # vmap strips the slot axis; restore a batch dim of 1 per leaf
+            cache1 = jax.tree.map(
+                lambda a, ax: jnp.expand_dims(a, ax), cache_stripped, axes
+            )
+            logits, new_cache = tf_lib.lm_decode_step(params, token, cache1, index, cfg, policy)
+            stripped = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax), new_cache, axes)
+            return logits[0], stripped  # logits: [vocab]
+
+        # vmap over slots: params broadcast, token/cache/index per-slot
+        self._step = jax.jit(
+            jax.vmap(decode_one, in_axes=(None, 0, self._axes, 0), out_axes=(0, self._axes))
+        )
+        self._prefill = jax.jit(
+            lambda p, t: tf_lib.lm_prefill(p, t, cfg, policy, max_len=max_len)
+        )
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.steps = 0
+
+    # -- API ----------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot.request is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache = self._prefill(self.params, tokens)
+            nxt = int(jnp.argmax(logits[0]))
+            req.output.append(nxt)
+            # install the request's cache into slot i along each leaf's
+            # batch axis (the prefill cache has batch 1 there)
+            def install(full, new, ax):
+                idx = [slice(None)] * full.ndim
+                idx[ax] = i
+                return full.at[tuple(idx)].set(jnp.take(new, 0, axis=ax).astype(full.dtype))
+
+            self.cache = jax.tree.map(install, self.cache, cache, self._axes)
+            slot.request = req
+            slot.length = len(req.prompt) + 1
+
+    def step(self) -> int:
+        """One engine tick: admit, batched decode, retire. Returns #active."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.request is not None]
+        if not active:
+            return 0
+        tokens = jnp.asarray(
+            [[s.request.output[-1] if s.request else 0] for s in self.slots],
+            jnp.int32,
+        )  # [slot, 1]
+        index = jnp.asarray(
+            [s.length - 1 if s.request else 0 for s in self.slots], jnp.int32
+        )
+        logits, new_cache = self._step(self.params, tokens[:, None, :], self.cache, index)
+        self.cache = new_cache
+        self.steps += 1
+        nxt = jnp.argmax(logits, axis=-1)  # [slot]
+        for i in active:
+            slot = self.slots[i]
+            req = slot.request
+            tok = int(nxt[i])
+            req.output.append(tok)
+            slot.length += 1
+            if (
+                (req.eos_id is not None and tok == req.eos_id)
+                or len(req.output) >= req.max_tokens
+                or slot.length >= self.max_len
+            ):
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = _Slot()
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 1000):
+        while (self.queue or any(s.request for s in self.slots)) and self.steps < max_steps:
+            self.step()
+        return self.finished

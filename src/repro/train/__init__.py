@@ -1,0 +1,9 @@
+from repro.train.optimizer import (  # noqa: F401
+    AdamWConfig,
+    adamw_update,
+    init_opt_state,
+    opt_state_specs,
+    warmup_cosine,
+    zero1_specs,
+)
+from repro.train.train_loop import make_train_step, shard_train_step  # noqa: F401

@@ -1,0 +1,138 @@
+"""AdamW in pure JAX pytrees, with ZeRO-1 sharding and complex support.
+
+Complex leaves (FNO spectral weights) use nu = E[|g|^2] (real) so the update
+is phase-correct. ZeRO-1: optimizer moments are sharded over the data axis
+on the largest divisible replicated dim of each leaf — ``zero1_specs``
+derives the moment PartitionSpecs from the parameter specs, and XLA's SPMD
+partitioner turns the update into reduce-scatter + all-gather form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.tree import global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Union[float, Callable[[jax.Array], jax.Array]] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return jnp.asarray(self.lr(step), jnp.float32)
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def init_opt_state(params) -> dict:
+    def zeros_like_moment(p, second: bool):
+        if jnp.issubdtype(p.dtype, jnp.complexfloating) and second:
+            return jnp.zeros(p.shape, jnp.float32)  # nu = E[|g|^2] is real
+        return jnp.zeros(p.shape, p.dtype)
+
+    return {
+        "mu": jax.tree.map(lambda p: zeros_like_moment(p, False), params),
+        "nu": jax.tree.map(lambda p: zeros_like_moment(p, True), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig, step=None):
+    """Returns (new_params, new_opt_state, stats)."""
+    count = opt_state["count"] + 1
+    step = count if step is None else step
+    lr = cfg.lr_at(step)
+
+    gnorm = global_norm(grads)
+    if cfg.grad_clip is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(mu.dtype)
+        mu_n = b1 * mu + (1 - b1) * g32
+        if jnp.issubdtype(p.dtype, jnp.complexfloating):
+            g2 = jnp.real(g32 * jnp.conj(g32)).astype(nu.dtype)
+        else:
+            g2 = jnp.square(g32).astype(nu.dtype)
+        nu_n = b2 * nu + (1 - b2) * g2
+        mu_hat = mu_n / bc1
+        nu_hat = nu_n / bc2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps).astype(mu_hat.dtype)
+        new_p = p - (lr * delta).astype(p.dtype)
+        if cfg.weight_decay and not jnp.issubdtype(p.dtype, jnp.complexfloating):
+            new_p = new_p - (lr * cfg.weight_decay * p.astype(jnp.float32)).astype(p.dtype)
+        return new_p, mu_n, nu_n
+
+    flat = jax.tree.map(upd, params, grads, opt_state["mu"], opt_state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return (
+        new_params,
+        {"mu": new_mu, "nu": new_nu, "count": count},
+        {"grad_norm": gnorm, "lr": lr},
+    )
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: shard moments over the data axis.
+# ---------------------------------------------------------------------------
+
+def zero1_specs(param_spec_tree, abstract_params, mesh: Mesh, dp_axes=("data",)):
+    """Moment PartitionSpecs: param spec + data-axis sharding on the largest
+    still-replicated, divisible dim. Leaves with no such dim stay as-is."""
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def one(spec, p):
+        if not isinstance(spec, P):
+            spec = P()
+        dims = list(spec) + [None] * (len(p.shape) - len(spec))
+        best, best_size = None, 0
+        for i, (d, s) in enumerate(zip(dims, p.shape)):
+            if d is None and s % dp_size == 0 and s > best_size:
+                best, best_size = i, s
+        if best is not None:
+            dims[best] = dp
+        return P(*dims)
+
+    return jax.tree.map(
+        one, param_spec_tree, abstract_params, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def opt_state_specs(param_spec_tree, abstract_params, mesh=None, dp_axes=("data",), zero1=True):
+    """PartitionSpec tree matching init_opt_state's structure."""
+    if zero1 and mesh is not None:
+        moment = zero1_specs(param_spec_tree, abstract_params, mesh, dp_axes)
+    else:
+        moment = param_spec_tree
+    return {"mu": moment, "nu": moment, "count": P()}

@@ -1,0 +1,7 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Smoke tests must see the real single-device CPU (the 512-device flag is
+# set ONLY inside launch/dryrun.py and the distributed-test subprocesses).

@@ -1,0 +1,261 @@
+"""Distributed-equivalence assertions, run under 8 simulated host devices.
+
+Executed as a subprocess by test_distributed.py (the device-count flag must
+be set before jax initializes, so this cannot run inside the main pytest
+process, which must keep seeing 1 device for the smoke tests).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import (
+    FNOConfig, fno_forward, init_params, make_dist_forward,
+    make_pipeline_forward, param_specs, repartition, ulysses_attention,
+)
+from repro.core.partition import make_mesh
+from repro.core.ulysses import _dense_attention
+
+CHECKS = []
+
+
+def check(fn):
+    CHECKS.append(fn)
+    return fn
+
+
+@check
+def repartition_roundtrip_and_adjoint():
+    mesh = make_mesh((8,), ("model",))
+    x = jnp.arange(2 * 8 * 16, dtype=jnp.float32).reshape(2, 8, 16) + 1j * 3.0
+    x = x.astype(jnp.complex64)
+
+    def rt(a):
+        b = repartition(a, src=1, dst=2, axis_name="model")
+        return repartition(b, src=2, dst=1, axis_name="model")
+
+    y = jax.jit(jax.shard_map(rt, mesh=mesh, in_specs=P(None, "model", None),
+                              out_specs=P(None, "model", None), check_vma=False))(x)
+    assert bool(jnp.all(y == x)), "repartition roundtrip failed"
+
+    # adjoint: <R x, y> == <x, R^T y>
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (2, 8, 16))
+    b = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    fwd = jax.jit(jax.shard_map(
+        lambda t: repartition(t, 1, 2, "model"), mesh=mesh,
+        in_specs=P(None, "model", None), out_specs=P(None, None, "model"), check_vma=False))
+    bwd = jax.jit(jax.shard_map(
+        lambda t: repartition(t, 2, 1, "model"), mesh=mesh,
+        in_specs=P(None, None, "model"), out_specs=P(None, "model", None), check_vma=False))
+    lhs = jnp.vdot(fwd(a), fwd(jnp.zeros_like(a)) * 0 + fwd(a) * 0 + fwd(b) * 0 + fwd(b))
+    # simpler: <R a, R b> == <a, b> (R is orthogonal permutation)
+    lhs = jnp.vdot(fwd(a), fwd(b))
+    rhs = jnp.vdot(a, b)
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-5)
+    # and R^T R == I
+    np.testing.assert_allclose(np.asarray(bwd(fwd(a))), np.asarray(a), rtol=1e-6)
+
+
+@check
+def fno_dist_matches_serial():
+    cfg = FNOConfig(grid=(16, 16, 8, 8), modes=(4, 4, 2, 3), width=6,
+                    in_channels=2, out_channels=1, n_blocks=3, decoder_dim=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 16, 16, 8, 8))
+    y_ser = jax.jit(lambda p, x: fno_forward(p, x, cfg))(params, x)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    for variant in ("paper", "grady31"):
+        fwd = make_dist_forward(mesh, cfg, dp_axes=("data",), variant=variant)
+        y = jax.jit(fwd)(params, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ser), rtol=2e-4, atol=2e-5)
+    # gradient equivalence through the distributed path
+    g_ser = jax.jit(jax.grad(lambda p: jnp.mean(fno_forward(p, x, cfg) ** 2)))(params)
+    fwd = make_dist_forward(mesh, cfg, dp_axes=("data",))
+    g_dd = jax.jit(jax.grad(lambda p: jnp.mean(fwd(p, x) ** 2)))(params)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-5),
+        g_dd, g_ser,
+    )
+
+
+@check
+def pipeline_matches_serial():
+    cfg = FNOConfig(grid=(16, 16, 8, 8), modes=(4, 4, 2, 3), width=6,
+                    in_channels=1, out_channels=1, n_blocks=4, decoder_dim=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, 16, 16, 8, 8))
+    y_ser = jax.jit(lambda p, x: fno_forward(p, x, cfg))(params, x)
+    mesh = make_mesh((1, 4), ("data", "model"))
+    pfwd = make_pipeline_forward(mesh, cfg, n_micro=2)
+    y_pp = jax.jit(pfwd)(params, x)
+    np.testing.assert_allclose(np.asarray(y_pp), np.asarray(y_ser), rtol=2e-4, atol=2e-5)
+
+
+@check
+def ulysses_matches_dense():
+    mesh = make_mesh((8,), ("model",))
+    b, s, h, kvh, d = 2, 32, 8, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kvh, d))
+    v = jax.random.normal(ks[2], (b, s, kvh, d))
+    ref = _dense_attention(q, k, v, causal=True, scale=None)
+    fn = jax.shard_map(
+        lambda q, k, v: ulysses_attention(q, k, v, "model", causal=True),
+        mesh=mesh,
+        in_specs=(P(None, "model"), P(None, "model"), P(None, "model")),
+        out_specs=P(None, "model"),
+        check_vma=False,
+    )
+    out = jax.jit(fn)(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
+    # GQA path (kvh not divisible by axis -> all-gather branch)
+    k2 = k[:, :, :2]
+    v2 = v[:, :, :2]
+    ref2 = _dense_attention(q, k2, v2, causal=True, scale=None)
+    fn2 = jax.shard_map(
+        lambda q, k, v: ulysses_attention(q, k, v, "model", causal=True),
+        mesh=mesh,
+        in_specs=(P(None, "model"), P(None, "model"), P(None, "model")),
+        out_specs=P(None, "model"),
+        check_vma=False,
+    )
+    out2 = jax.jit(fn2)(q, k2, v2)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref2), rtol=2e-4, atol=2e-5)
+
+
+@check
+def moe_a2a_matches_local():
+    from repro.models.moe import MoEConfig, init_moe_params, moe_apply
+    from repro.models.policy import LOCAL, ParallelPolicy
+
+    moe = MoEConfig(n_experts=8, top_k=2, d_expert=16, n_shared=1,
+                    capacity_factor=4.0)  # ample capacity -> no drops
+    d = 32
+    params = init_moe_params(jax.random.PRNGKey(0), d, moe)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d))
+    y_local, aux_local = jax.jit(lambda p, x: moe_apply(p, x, moe, LOCAL))(params, x)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    policy = ParallelPolicy(mesh=mesh, dp_axes=("data",), model_axis="model")
+    y_dist, aux_dist = jax.jit(lambda p, x: moe_apply(p, x, moe, policy))(params, x)
+    np.testing.assert_allclose(np.asarray(y_dist), np.asarray(y_local), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(float(aux_dist), float(aux_local), rtol=1e-3)
+
+
+@check
+def head_padding_exact():
+    """attn_forward with n_heads %% P != 0 (zero-padded heads) == LOCAL."""
+    import dataclasses
+    from repro.configs import get_arch, reduced
+    from repro.models import attention as attn_lib
+    from repro.models.policy import LOCAL, ParallelPolicy
+
+    cfg = dataclasses.replace(reduced(get_arch("qwen1.5-32b")), n_heads=6, kv_heads=6)
+    p = attn_lib.init_attn_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model))
+    ref = jax.jit(lambda p, x: attn_lib.attn_forward(p, x, cfg, LOCAL))(p, x)
+    mesh = make_mesh((1, 4), ("data", "model"))
+    pol = ParallelPolicy(mesh=mesh, dp_axes=("data",), model_axis="model")
+    out = jax.jit(lambda p, x: attn_lib.attn_forward(p, x, cfg, pol))(p, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-4)
+
+
+@check
+def dist_lm_loss_matches_local():
+    """Full LM train loss: pjit on a 2x4 mesh == single-device (same params)."""
+    from repro.configs import get_arch, reduced
+    from repro.models import init_lm_params, lm_loss
+    from repro.models.policy import LOCAL, ParallelPolicy
+
+    for arch in ("chatglm3-6b", "deepseek-moe-16b"):
+        cfg = reduced(get_arch(arch))
+        params = init_lm_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+        batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, axis=1)}
+        loss_local, _ = jax.jit(lambda p, b: lm_loss(p, b, cfg, LOCAL))(params, batch)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        pol = ParallelPolicy(mesh=mesh, dp_axes=("data",), model_axis="model", seq_shard=True)
+        loss_dist, _ = jax.jit(lambda p, b: lm_loss(p, b, cfg, pol))(params, batch)
+        np.testing.assert_allclose(float(loss_dist), float(loss_local), rtol=3e-3)
+
+
+@check
+def checkpoint_elastic_resharding():
+    """Save on a (2,4) mesh, restore onto (4,2) and onto 1 device."""
+    import tempfile
+    from repro.train import checkpoint as ck
+
+    mesh_a = make_mesh((2, 4), ("data", "model"))
+    x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    xa = jax.device_put(x, NamedSharding(mesh_a, P("data", "model")))
+    tree = {"w": xa, "b": jnp.ones((8,))}
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 3, tree)
+        abstract = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+        mesh_b = make_mesh((4, 2), ("data", "model"))
+        shardings = {
+            "w": NamedSharding(mesh_b, P("model", "data")),
+            "b": NamedSharding(mesh_b, P()),
+        }
+        restored, step, _ = ck.restore(d, abstract, shardings=shardings)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(x))
+        restored1, _, _ = ck.restore(d, abstract)
+        np.testing.assert_array_equal(np.asarray(restored1["w"]), np.asarray(x))
+
+
+@check
+def compressed_allreduce_error_feedback():
+    from repro.train.compression import compressed_psum_mean, init_error_state
+
+    mesh = make_mesh((8,), ("data",))
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
+
+    def run(gs, ratio):
+        def body(g_local, err_local):
+            red, new_err = compressed_psum_mean(
+                g_local[0], err_local[0], "data", ratio=ratio
+            )
+            return red, new_err[None]
+        return jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(P("data", None), P("data", None)),
+            out_specs=(P(None), P("data", None)), check_vma=False,
+        ))(gs, jnp.zeros((8, 256)))
+
+    # ratio=1.0 -> lossless: equals dense mean
+    red, err = run(g, 1.0)
+    np.testing.assert_allclose(np.asarray(red), np.asarray(g.mean(0)), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(err), 0.0, atol=1e-6)
+    # ratio<1: error feedback retains the residual exactly
+    red2, err2 = run(g, 0.1)
+    # reduced + mean(err) == dense mean (conservation)
+    np.testing.assert_allclose(
+        np.asarray(red2 + err2.mean(0)), np.asarray(g.mean(0)), rtol=1e-4, atol=1e-5
+    )
+
+
+def main():
+    failed = []
+    for fn in CHECKS:
+        try:
+            fn()
+            print(f"PASS {fn.__name__}")
+        except Exception as e:  # noqa: BLE001
+            failed.append((fn.__name__, repr(e)))
+            print(f"FAIL {fn.__name__}: {e!r}")
+    if failed:
+        sys.exit(1)
+    print("ALL_DISTRIBUTED_CHECKS_PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Truncated-FFT operator properties (the paper's S and F operators)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dfft
+
+
+def _rand_complex(key, shape):
+    k1, k2 = jax.random.split(key)
+    return (jax.random.normal(k1, shape) + 1j * jax.random.normal(k2, shape)).astype(jnp.complex64)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.sampled_from([8, 12, 16]), m=st.integers(1, 4), axis=st.integers(2, 5))
+def test_truncate_pad_adjoint(n, m, axis):
+    """<S x, y> == <x, S^T y> — S (truncation) and S^T (zero-pad) are adjoints."""
+    if 2 * m > n:
+        m = n // 2
+    shape = [2, 3, n, n, n, n]
+    key = jax.random.PRNGKey(n * 10 + m)
+    x = _rand_complex(key, tuple(shape))
+    tshape = list(shape)
+    tshape[axis] = 2 * m
+    y = _rand_complex(jax.random.PRNGKey(7), tuple(tshape))
+    sx = dfft.truncate_full(x, axis, m)
+    sty = dfft.pad_full(y, axis, n)
+    lhs = jnp.vdot(sx, y)
+    rhs = jnp.vdot(x, sty)
+    np.testing.assert_allclose(complex(lhs), complex(rhs), rtol=1e-5, atol=1e-5)
+
+
+def test_rfft_truncate_pad_adjoint():
+    key = jax.random.PRNGKey(0)
+    x = _rand_complex(key, (2, 3, 4, 4, 4, 9))
+    y = _rand_complex(jax.random.PRNGKey(1), (2, 3, 4, 4, 4, 5))
+    lhs = jnp.vdot(dfft.truncate_rfft(x, 5, 5), y)
+    rhs = jnp.vdot(x, dfft.pad_rfft(y, 5, 9))
+    np.testing.assert_allclose(complex(lhs), complex(rhs), rtol=1e-5)
+
+
+def test_serial_roundtrip_bandlimited():
+    """Band-limiting behaviour of the FNO corner-mode set.
+
+    The classic [:m]+[-m:] corner set is NOT Hermitian-symmetric (index m
+    pairs with n-m, which is kept, while m itself is not), so A∘F is a
+    CONTRACTION rather than a projection on real fields: the unpaired
+    modes halve every pass. We assert (a) the contraction, and (b) exact
+    idempotence once the unpaired slice (local index m of each full dim)
+    is zeroed — the truly symmetric sub-space."""
+    cfg_grid = (16, 16, 8, 8)
+    modes = (4, 4, 2, 3)
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (1, 2) + cfg_grid)
+
+    def af(x):
+        return dfft.serial_adjoint(dfft.serial_forward(x, modes), cfg_grid)
+
+    x1, x2, x3 = af(x0), af(af(x0)), af(af(af(x0)))
+    d1 = float(jnp.max(jnp.abs(x2 - x1)))
+    d2 = float(jnp.max(jnp.abs(x3 - x2)))
+    assert d2 < 0.6 * d1  # geometric contraction of the unpaired modes
+
+    # symmetric sub-space: zero the unpaired mode slice per full-fft dim
+    spec = dfft.serial_forward(x0, modes)
+    mx, my, mz, _ = modes
+    spec = spec.at[:, :, mx].set(0).at[:, :, :, my].set(0).at[:, :, :, :, mz].set(0)
+    xs = dfft.serial_adjoint(spec, cfg_grid)
+    xs2 = af(xs)
+    np.testing.assert_allclose(np.asarray(xs2), np.asarray(xs), rtol=1e-4, atol=1e-5)
+
+
+def test_forward_matches_numpy_oracle():
+    """serial_forward == rfftn + explicit corner selection (independent impl)."""
+    x = np.random.default_rng(0).normal(size=(1, 1, 8, 8, 8, 8)).astype(np.float32)
+    modes = (2, 3, 2, 3)
+    got = np.asarray(dfft.serial_forward(jnp.asarray(x), modes))
+    full = np.fft.rfftn(x, axes=(2, 3, 4, 5))
+    mx, my, mz, mt = modes
+    sel = full[:, :, np.r_[0:mx, 8 - mx : 8], :, :, :]
+    sel = sel[:, :, :, np.r_[0:my, 8 - my : 8], :, :]
+    sel = sel[:, :, :, :, np.r_[0:mz, 8 - mz : 8], :]
+    sel = sel[:, :, :, :, :, :mt]
+    np.testing.assert_allclose(got, sel, rtol=1e-4, atol=1e-4)

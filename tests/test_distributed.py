@@ -1,0 +1,26 @@
+"""Multi-device (8 simulated hosts) equivalence tests, via subprocess —
+the device-count flag must be set before jax initializes, and the main
+pytest process must keep seeing 1 device."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(1200)
+def test_distributed_checks():
+    script = os.path.join(os.path.dirname(__file__), "distributed_checks.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, script],
+        capture_output=True,
+        text=True,
+        timeout=1200,
+        env=env,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed checks failed (see output)"
+    assert "ALL_DISTRIBUTED_CHECKS_PASSED" in proc.stdout

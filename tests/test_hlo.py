@@ -1,0 +1,71 @@
+"""HLO analysis: loop-aware collective/flop accounting on real programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as ha
+
+
+def test_trip_count_weighting_flops():
+    """Same matmul: scanned 7x must report ~7x the flops of a single call."""
+    w = jnp.ones((64, 64))
+
+    def single(x):
+        return x @ w
+
+    def scanned(x):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    f1 = ha.collect_compute(jax.jit(single).lower(x).compile().as_text())["flops"]
+    f7 = ha.collect_compute(jax.jit(scanned).lower(x).compile().as_text())["flops"]
+    assert f1 > 0
+    np.testing.assert_allclose(f7 / f1, 7.0, rtol=0.15)
+
+
+def test_collective_bytes_and_groups():
+    """psum over an 8-way axis: all-reduce bytes = 2*size*(g-1)/g."""
+    import os, subprocess, sys, textwrap
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, %r)
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.partition import make_mesh
+        from repro.launch import hlo_analysis as ha
+
+        mesh = make_mesh((8,), ("d",))
+        fn = jax.shard_map(lambda x: jax.lax.psum(x, "d"), mesh=mesh,
+                           in_specs=P("d"), out_specs=P(), check_vma=False)
+        hlo = jax.jit(fn).lower(jax.ShapeDtypeStruct((8, 1024), jnp.float32)).compile().as_text()
+        st = ha.collect_collectives(hlo, 8)
+        expected = 2 * 1024 * 4 * 7 / 8
+        got = st.bytes_by_kind.get("all-reduce", 0)
+        assert abs(got - expected) / expected < 0.01, (got, expected)
+        print("COLL_OK")
+        """
+    ) % (os.path.join(os.path.dirname(__file__), "..", "src"),)
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True, text=True, timeout=300)
+    assert "COLL_OK" in proc.stdout, proc.stdout + proc.stderr[-2000:]
+
+
+def test_shape_bytes_parsing():
+    assert ha._shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert ha._shape_bytes("bf16[2,3]") == 12
+    assert ha._shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert ha._shape_bytes("pred[]") == 0 or ha._shape_bytes("pred[]") == 1
+
+
+def test_wire_bytes_models():
+    assert ha._wire_bytes("all-reduce", 100, 4) == 2 * 100 * 3 / 4
+    assert ha._wire_bytes("all-gather", 100, 4) == 100 * 3 / 4
+    assert ha._wire_bytes("reduce-scatter", 25, 4) == 25 * 3
+    assert ha._wire_bytes("collective-permute", 100, 4) == 100
+    assert ha._wire_bytes("all-to-all", 100, 1) == 0

@@ -1,0 +1,57 @@
+"""Serving engine: continuous batching correctness across families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import init_lm_params, lm_prefill
+from repro.models.policy import LOCAL
+from repro.serve import Engine, Request
+
+
+@pytest.mark.parametrize("arch_id", ["gemma-7b", "mamba2-370m", "deepseek-v2-lite-16b", "recurrentgemma-2b"])
+def test_engine_families(arch_id):
+    cfg = reduced(get_arch(arch_id))
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=48, max_batch=3)
+    for r in range(5):
+        eng.submit(Request(rid=r, prompt=[1 + r, 2, 3 + r, 4], max_tokens=5))
+    done = eng.run_until_done()
+    assert len(done) == 5
+    assert all(len(r.output) == 5 for r in done)
+
+
+def test_engine_matches_teacher_forcing():
+    """Greedy engine output == argmax chain from repeated full prefills."""
+    cfg = reduced(get_arch("chatglm3-6b"))
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    prompt = [5, 9, 2, 7]
+    n_new = 4
+
+    seq = list(prompt)
+    for _ in range(n_new):
+        logits, _ = jax.jit(lambda p, t: lm_prefill(p, t, cfg, LOCAL))(
+            params, jnp.asarray([seq], jnp.int32)
+        )
+        seq.append(int(jnp.argmax(logits[0])))
+    expected = seq[len(prompt):]
+
+    eng = Engine(cfg, params, max_len=32, max_batch=2)
+    eng.submit(Request(rid=0, prompt=prompt, max_tokens=n_new))
+    done = eng.run_until_done()
+    assert done[0].output == expected, (done[0].output, expected)
+
+
+def test_engine_continuous_admission():
+    """More requests than slots: later requests admitted as slots free."""
+    cfg = reduced(get_arch("gemma-7b"))
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=32, max_batch=2)
+    for r in range(6):
+        eng.submit(Request(rid=r, prompt=[r + 1, 2], max_tokens=3))
+    done = eng.run_until_done()
+    assert sorted(r.rid for r in done) == list(range(6))
+    # with 2 slots and 6 requests x 2 decode steps each, the engine must
+    # have interleaved (steps strictly less than sequential worst case)
+    assert eng.steps <= 6 * 3
