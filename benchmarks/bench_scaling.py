@@ -30,11 +30,23 @@ A100_PEAK_F32 = 19.5e12
 NVLINK_BW = 600e9
 
 
+def _pencil_shape(p: int) -> tuple:
+    """Near-square (px, py) factorization with px*py == p."""
+    px = 1
+    for cand in range(int(p ** 0.5), 0, -1):
+        if p % cand == 0:
+            px = p // cand
+            break
+    return px, p // px
+
+
 def _measure(p: int, mode: str, nx: int | None = None):
-    """Lower DD or PP FNO fwd at P shards (weak scaling: nx = 32*P unless a
-    fixed nx is given for strong scaling), production width/modes; return
-    per-device flops + collective bytes."""
+    """Lower DD (1-D x-decomposition), DD2D (pencil) or PP FNO fwd at P
+    shards (weak scaling: nx = 32*P unless a fixed nx is given for strong
+    scaling), production width/modes; return per-device flops + collective
+    bytes."""
     src = os.path.join(os.path.dirname(__file__), "..", "src")
+    px, py = _pencil_shape(p)
     script = textwrap.dedent(
         """
         import os
@@ -48,17 +60,23 @@ def _measure(p: int, mode: str, nx: int | None = None):
         from repro.launch import hlo_analysis as ha
 
         P = %d
+        PX, PY = %d, %d
         mode = %r
         nx = %d if %d else 32 * P
         cfg = FNOConfig(grid=(nx, 128, 128, 64), modes=(16, 16, 16, 8),
                         width=40, n_blocks=P if mode == "pp" else 4,
                         decoder_dim=128)
         params = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
-        mesh = make_mesh((1, P), ("data", "model"))
         x = jax.ShapeDtypeStruct((2, 1, nx, 128, 128, 64), jnp.float32)
         if mode == "dd":
+            mesh = make_mesh((1, P), ("data", "model"))
             fwd = make_dist_forward(mesh, cfg, dp_axes=("data",))
+        elif mode == "dd2d":
+            mesh = make_mesh((1, PX, PY), ("data", "mx", "my"))
+            fwd = make_dist_forward(mesh, cfg, dp_axes=("data",),
+                                    model_axis=("mx", "my"))
         else:
+            mesh = make_mesh((1, P), ("data", "model"))
             fwd = make_pipeline_forward(mesh, cfg, n_micro=2)
         hlo = jax.jit(fwd).lower(params, x).compile().as_text()
         comp = ha.collect_compute(hlo)
@@ -68,7 +86,7 @@ def _measure(p: int, mode: str, nx: int | None = None):
             "by_kind": coll.bytes_by_kind,
         }))
         """
-    ) % (max(p, 1), src, p, mode, nx or 0, nx or 0)
+    ) % (max(p, 1), src, p, px, py, mode, nx or 0, nx or 0)
     proc = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True, timeout=1800
     )
@@ -89,8 +107,9 @@ def run():
     for p in (2, 4, 8):
         dd = _measure(p, "dd")
         pp = _measure(p, "pp")
+        dd2d = _measure(p, "dd2d") if p >= 4 else None
         bubble = 2 / (2 + p - 1)  # M=2 microbatches (paper's BS=2 case)
-        rows.append({
+        row = {
             "P": p,
             "a100_dd": round(_eff(dd["flops"], dd["coll_bytes"], A100_PEAK_F32, NVLINK_BW), 3),
             "a100_pp": round(_eff(pp["flops"], pp["coll_bytes"], A100_PEAK_F32, NVLINK_BW, bubble), 3),
@@ -98,11 +117,26 @@ def run():
             "v5e_pp": round(_eff(pp["flops"], pp["coll_bytes"], PEAK_FLOPS_BF16, ICI_BANDWIDTH_PER_LINK, bubble), 3),
             "dd_coll_bytes": dd["coll_bytes"],
             "pp_coll_bytes": pp["coll_bytes"],
-        })
+        }
+        if dd2d is not None:
+            # 1-D vs 2-D: same flops (the pencil splits the SAME transform
+            # over a (px, py) grid of devices) but two smaller all-to-alls,
+            # and crucially no nx/2mx parallelism cap.
+            row["a100_dd2d"] = round(
+                _eff(dd2d["flops"], dd2d["coll_bytes"], A100_PEAK_F32, NVLINK_BW), 3)
+            row["v5e_dd2d"] = round(
+                _eff(dd2d["flops"], dd2d["coll_bytes"], PEAK_FLOPS_BF16, ICI_BANDWIDTH_PER_LINK), 3)
+            row["dd2d_coll_bytes"] = dd2d["coll_bytes"]
+            row["dd2d_mesh"] = list(_pencil_shape(p))
+        rows.append(row)
     derived = {
         f"weak_P{r['P']}": {
-            "a100_dd": r["a100_dd"], "a100_pp": r["a100_pp"],
-            "v5e_dd": r["v5e_dd"], "v5e_pp": r["v5e_pp"],
+            k: r[k]
+            for k in (
+                "a100_dd", "a100_pp", "v5e_dd", "v5e_pp",
+                "a100_dd2d", "v5e_dd2d", "dd_coll_bytes", "dd2d_coll_bytes",
+            )
+            if k in r
         }
         for r in rows
     }
@@ -115,4 +149,9 @@ def run():
         derived[f"strong_P{p}_a100_dd_speedup"] = round(t1 / tp, 2)
     derived["paper_claim"] = "A100: weak DD >0.90, PP <=0.50 (Fig. 6); strong DD near-linear (Fig. 7)"
     derived["note"] = "v5e columns motivate §Perf comm optimizations"
+    derived["dd2d_note"] = (
+        "dd2d = 2-D pencil decomposition (BEYOND-PAPER): lifts the 1-D cap "
+        "of nx/2mx devices to (nx/2mx)*(ny/2my); compare dd vs dd2d "
+        "coll_bytes at equal P for the comm cost of the second all-to-all"
+    )
     return 0.0, derived

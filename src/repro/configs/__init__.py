@@ -28,7 +28,7 @@ ARCH_IDS = (
     "recurrentgemma-2b",
 )
 
-FNO_IDS = ("fno-ns3d", "fno-sleipner")
+FNO_IDS = ("fno-ns3d", "fno-sleipner", "fno-sleipner-2d")
 
 _MODULES = {arch_id: arch_id.replace("-", "_").replace(".", "_") for arch_id in ARCH_IDS}
 
@@ -40,11 +40,25 @@ def get_arch(name: str) -> ArchConfig:
     return mod.CONFIG
 
 
-def get_fno(name: str):
+def _fno_module(name: str):
     if name not in FNO_IDS:
         raise KeyError(f"unknown FNO config {name!r}")
-    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+    return importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+
+
+def get_fno(name: str):
+    mod = _fno_module(name)
     return mod.CONFIG, mod.SHAPES
+
+
+def get_fno_model_axes(name: str):
+    """Model-parallel layout for an FNO config: (model_axis, pencil_shape).
+
+    1-D configs return ("model", None); pencil configs declare MODEL_AXES
+    (e.g. ("mx", "my")) and PENCIL_SHAPE (e.g. (8, 4)) in their module.
+    """
+    mod = _fno_module(name)
+    return getattr(mod, "MODEL_AXES", "model"), getattr(mod, "PENCIL_SHAPE", None)
 
 
 def reduced(cfg: ArchConfig) -> ArchConfig:

@@ -9,11 +9,17 @@ Public surface:
   * ``ulysses_attention`` — the repartition primitive applied to attention
 """
 from repro.core.partition import CartPartition, make_mesh  # noqa: F401
-from repro.core.repartition import repartition, repartition_t  # noqa: F401
+from repro.core.repartition import (  # noqa: F401
+    repartition,
+    repartition_multi,
+    repartition_multi_t,
+    repartition_t,
+)
 from repro.core.fno import (  # noqa: F401
     FNOConfig,
     fno_forward,
     fno_forward_dist,
+    fno_forward_dist_2d,
     init_params,
     make_dist_forward,
     mse_loss,

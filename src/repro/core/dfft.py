@@ -24,6 +24,7 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common import compat
 from repro.core.repartition import repartition
 
 # Dim indices in the canonical [b, c, x, y, z, t] layout.
@@ -97,18 +98,29 @@ def pad_modes(
 # ---------------------------------------------------------------------------
 
 def serial_forward(x: jax.Array, modes: Sequence[int]) -> jax.Array:
-    """rfftn over (x,y,z,t) then truncation. x: real [b,c,nx,ny,nz,nt]."""
-    xf = jnp.fft.rfftn(x.astype(jnp.float32), axes=SPATIAL_DIMS)
+    """rFFT over t + 3-D FFT over (x,y,z), then truncation.
+
+    x: real [b,c,nx,ny,nz,nt]. Equivalent to rfftn over all four dims, but
+    XLA only lowers FFTs of rank <= 3, so the 4-D transform is composed
+    from a 1-D rFFT and a 3-D FFT (per-axis FFTs commute).
+    """
+    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
+    xf = jnp.fft.fftn(xf, axes=(XDIM, YDIM, ZDIM))
     return truncate_modes(xf, modes)
 
 
 def serial_adjoint(
     xf: jax.Array, grid: Sequence[int], out_dtype=jnp.float32
 ) -> jax.Array:
-    """Zero-pad then irfftn; grid is the real-space (nx,ny,nz,nt)."""
+    """Zero-pad then inverse transform; grid is the real-space (nx,ny,nz,nt).
+
+    Composed as 3-D iFFT over (x,y,z) + 1-D irFFT over t for the same
+    rank-3 XLA limit; the 1/N scaling factors multiply to irfftn's.
+    """
     nx, ny, nz, nt = grid
     full = pad_modes(xf, (nx, ny, nz, nt // 2 + 1))
-    y = jnp.fft.irfftn(full, s=(nx, ny, nz, nt), axes=SPATIAL_DIMS)
+    full = jnp.fft.ifftn(full, axes=(XDIM, YDIM, ZDIM))
+    y = jnp.fft.irfft(full, n=nt, axis=TDIM)
     return y.astype(out_dtype)
 
 
@@ -221,6 +233,125 @@ def dist_adjoint_eager(
 
 
 # ---------------------------------------------------------------------------
+# 2-D pencil decomposition (BEYOND-PAPER): input sharded along BOTH x and y
+# on a ("mx", "my") mesh. Algorithm 2 shards a single spatial dim, capping
+# model parallelism at nx/2mx devices; pencil decomposition lifts that cap
+# to (nx/2mx)*(ny/2my) by composing two per-mesh-axis repartitions:
+#
+#   forward:  S_x F_x R^{mx}_{x->y} S_y F_y R^{my}_{y->z} S_{zt} F_{zt}
+#   adjoint:  F_{zt}^T S_{zt}^T R^{my}_{z->y} F_y^T S_y^T R^{mx}_{y->x} F_x^T S_x^T
+#
+# Each all-to-all moves an already-truncated tensor (the paper's comm
+# optimization, applied per mesh axis). Local layout through the forward:
+#
+#   [b,c, nx/Px, ny/Py, nz,     nt ]   rFFT t, FFT z, truncate z/t
+#   [b,c, nx/Px, ny/Py, 2mz,    mt ]   R^{my}: y-shard moves to z
+#   [b,c, nx/Px, ny,    2mz/Py, mt ]   FFT y, truncate y
+#   [b,c, nx/Px, 2my,   2mz/Py, mt ]   R^{mx}: x-shard moves to y
+#   [b,c, nx,    2my/Px,2mz/Py, mt ]   FFT x, truncate x
+#   [b,c, 2mx,   2my/Px,2mz/Py, mt ]   spectral weights sharded k_y x k_z
+#
+# Divisibility: Px | nx, Px | 2my, Py | ny, Py | 2mz.
+# ---------------------------------------------------------------------------
+
+def dist_forward_2d(
+    x: jax.Array, modes: Sequence[int], axis_names: Tuple[str, str] = ("mx", "my")
+) -> jax.Array:
+    """Pencil-decomposed forward transform (call inside shard_map).
+
+    In: local real [b, c, nx/Px, ny/Py, nz, nt], sharded x on
+    ``axis_names[0]`` and y on ``axis_names[1]``.
+    Out: local complex [b, c, 2mx, 2my/Px, 2mz/Py, mt].
+    """
+    ax_x, ax_y = axis_names
+    mx, my, mz, mt = modes
+    # F_{zt}, S_{zt}: both dims are unsharded on every pencil.
+    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
+    xf = jnp.fft.fft(xf, axis=ZDIM)
+    xf = truncate_full(xf, ZDIM, mz)
+    xf = truncate_rfft(xf, TDIM, mt)
+    # R^{my}_{y->z}: unshard y by sharding the (truncated) z dim.
+    xf = repartition(xf, src=YDIM, dst=ZDIM, axis_name=ax_y)
+    xf = jnp.fft.fft(xf, axis=YDIM)
+    xf = truncate_full(xf, YDIM, my)
+    # R^{mx}_{x->y}: unshard x by sharding the (truncated) y dim.
+    xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=ax_x)
+    xf = jnp.fft.fft(xf, axis=XDIM)
+    xf = truncate_full(xf, XDIM, mx)
+    return xf
+
+
+def dist_adjoint_2d(
+    xf: jax.Array,
+    grid: Sequence[int],
+    axis_names: Tuple[str, str] = ("mx", "my"),
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Adjoint of ``dist_forward_2d`` (each R^T is the reverse all-to-all).
+
+    In: local complex [b, c, 2mx, 2my/Px, 2mz/Py, mt].
+    Out: local real [b, c, nx/Px, ny/Py, nz, nt].
+    """
+    ax_x, ax_y = axis_names
+    nx, ny, nz, nt = grid
+    xf = pad_full(xf, XDIM, nx)
+    xf = jnp.fft.ifft(xf, axis=XDIM)
+    xf = repartition(xf, src=YDIM, dst=XDIM, axis_name=ax_x)
+    xf = pad_full(xf, YDIM, ny)
+    xf = jnp.fft.ifft(xf, axis=YDIM)
+    xf = repartition(xf, src=ZDIM, dst=YDIM, axis_name=ax_y)
+    xf = pad_full(xf, ZDIM, nz)
+    xf = pad_rfft(xf, TDIM, nt // 2 + 1)
+    xf = jnp.fft.ifft(xf, axis=ZDIM)
+    y = jnp.fft.irfft(xf, n=nt, axis=TDIM)
+    return y.astype(out_dtype)
+
+
+def dist_forward_2d_eager(
+    x: jax.Array, modes: Sequence[int], axis_names: Tuple[str, str] = ("mx", "my")
+) -> jax.Array:
+    """2-D pencil forward with per-dim eager truncation: t is truncated
+    before the z FFT, so the z FFT runs on an mt-deep tensor (same flop
+    saving as the 1-D eager schedule; bit-equivalent to dist_forward_2d)."""
+    ax_x, ax_y = axis_names
+    mx, my, mz, mt = modes
+    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
+    xf = truncate_rfft(xf, TDIM, mt)
+    xf = jnp.fft.fft(xf, axis=ZDIM)
+    xf = truncate_full(xf, ZDIM, mz)
+    xf = repartition(xf, src=YDIM, dst=ZDIM, axis_name=ax_y)
+    xf = jnp.fft.fft(xf, axis=YDIM)
+    xf = truncate_full(xf, YDIM, my)
+    xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=ax_x)
+    xf = jnp.fft.fft(xf, axis=XDIM)
+    xf = truncate_full(xf, XDIM, mx)
+    return xf
+
+
+def dist_adjoint_2d_eager(
+    xf: jax.Array,
+    grid: Sequence[int],
+    axis_names: Tuple[str, str] = ("mx", "my"),
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Adjoint of the eager 2-D schedule: each pad happens right before its
+    own iFFT, so earlier iFFTs run on still-truncated tensors."""
+    ax_x, ax_y = axis_names
+    nx, ny, nz, nt = grid
+    xf = pad_full(xf, XDIM, nx)
+    xf = jnp.fft.ifft(xf, axis=XDIM)
+    xf = repartition(xf, src=YDIM, dst=XDIM, axis_name=ax_x)
+    xf = pad_full(xf, YDIM, ny)
+    xf = jnp.fft.ifft(xf, axis=YDIM)
+    xf = repartition(xf, src=ZDIM, dst=YDIM, axis_name=ax_y)
+    xf = pad_full(xf, ZDIM, nz)
+    xf = jnp.fft.ifft(xf, axis=ZDIM)
+    xf = pad_rfft(xf, TDIM, nt // 2 + 1)
+    y = jnp.fft.irfft(xf, n=nt, axis=TDIM)
+    return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
 # Grady et al. [31] baseline schedule: repartition FIRST, truncate AFTER.
 # Communicates the full (untruncated along y/z/t) spectrum — the paper's
 # comparison point for the 160x communication reduction.
@@ -254,7 +385,7 @@ def truncate_y_local(xf: jax.Array, my: int, axis_name: str) -> jax.Array:
     """
     full = jax.lax.all_gather(xf, axis_name, axis=YDIM, tiled=True)
     kept = truncate_full(full, YDIM, my)
-    p = jax.lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     local = kept.shape[YDIM] // p
     return jax.lax.dynamic_slice_in_dim(kept, idx * local, local, axis=YDIM)
@@ -264,7 +395,7 @@ def pad_y_local(xf: jax.Array, ny: int, axis_name: str) -> jax.Array:
     """Adjoint-ish inverse of truncate_y_local for the [31] baseline path."""
     full_kept = jax.lax.all_gather(xf, axis_name, axis=YDIM, tiled=True)
     padded = pad_full(full_kept, YDIM, ny)
-    p = jax.lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     local = ny // p
     return jax.lax.dynamic_slice_in_dim(padded, idx * local, local, axis=YDIM)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.common import compat
 from repro.core import dfft
 from repro.core.dfft import BDIM, CDIM, XDIM, YDIM, ZDIM, TDIM
 from repro.kernels.spectral_conv import spectral_apply
@@ -52,9 +53,30 @@ class FNOConfig:
             raise ValueError(f"nx={nx} not divisible by {n_shards} shards")
         if two_my % n_shards:
             raise ValueError(f"2*my={two_my} not divisible by {n_shards} shards")
+        self._validate_modes_fit()
+
+    def validate_for_parallelism_2d(self, n_x: int, n_y: int) -> None:
+        """Pencil decomposition: x sharded n_x ways, y sharded n_y ways.
+
+        The two repartitions move the x-shard onto the truncated y dim and
+        the y-shard onto the truncated z dim, hence the 2my/2mz constraints.
+        """
+        nx, ny = self.grid[0], self.grid[1]
+        two_my, two_mz = 2 * self.modes[1], 2 * self.modes[2]
+        if nx % n_x:
+            raise ValueError(f"nx={nx} not divisible by {n_x} x-shards")
+        if two_my % n_x:
+            raise ValueError(f"2*my={two_my} not divisible by {n_x} x-shards")
+        if ny % n_y:
+            raise ValueError(f"ny={ny} not divisible by {n_y} y-shards")
+        if two_mz % n_y:
+            raise ValueError(f"2*mz={two_mz} not divisible by {n_y} y-shards")
+        self._validate_modes_fit()
+
+    def _validate_modes_fit(self) -> None:
         mx, my, mz, mt = self.modes
-        nx_, ny, nz, nt = self.grid
-        if 2 * mx > nx_ or 2 * my > ny or 2 * mz > nz or mt > nt // 2 + 1:
+        nx, ny, nz, nt = self.grid
+        if 2 * mx > nx or 2 * my > ny or 2 * mz > nz or mt > nt // 2 + 1:
             raise ValueError(f"modes {self.modes} exceed grid {self.grid}")
 
 
@@ -92,15 +114,25 @@ def init_params(key: jax.Array, cfg: FNOConfig) -> dict:
     }
 
 
-def param_specs(mesh: Mesh, model_axis: str = "model") -> dict:
+def param_specs(mesh: Mesh, model_axis="model") -> dict:
     """PartitionSpecs: spectral weights sharded along k_y (paper Alg. 2);
-    encoder/decoder/bypass replicated (the paper's broadcast B)."""
+    encoder/decoder/bypass replicated (the paper's broadcast B).
+
+    ``model_axis`` may be a single axis name (1-D: shard k_y) or a pair
+    (2-D pencil: shard k_y by the x-mesh axis and k_z by the y-mesh axis —
+    the dims each shard lands on after the pencil forward's repartitions).
+    """
     del mesh
+    if isinstance(model_axis, (tuple, list)):
+        ax_x, ax_y = model_axis
+        w_spec = P(None, None, None, None, ax_x, ax_y, None)
+    else:
+        # [n_blocks, ci, co, kx, ky, kz, kt] -> shard ky
+        w_spec = P(None, None, None, None, model_axis, None, None)
     return {
         "encoder": {"w": P(), "b": P()},
         "blocks": {
-            # [n_blocks, ci, co, kx, ky, kz, kt] -> shard ky
-            "w_spec": P(None, None, None, None, model_axis, None, None),
+            "w_spec": w_spec,
             "w_bypass": P(),
             "b_bypass": P(),
         },
@@ -190,6 +222,23 @@ def fno_block_dist_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
     return jax.nn.gelu(y + _bypass(x, w_b, b_b))
 
 
+def fno_block_dist_2d(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names):
+    """2-D pencil block: x sharded along both x and y, spectral weights
+    sharded along k_y x k_z (matching dist_forward_2d's output layout)."""
+    xf = dfft.dist_forward_2d(x, cfg.modes, axis_names)
+    yf = spectral_apply(xf, w_spec, use_pallas=cfg.use_pallas)
+    y = dfft.dist_adjoint_2d(yf, cfg.grid, axis_names, out_dtype=cfg.dtype)
+    return jax.nn.gelu(y + _bypass(x, w_b, b_b))
+
+
+def fno_block_dist_2d_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names):
+    """2-D pencil block with per-dim eager truncation."""
+    xf = dfft.dist_forward_2d_eager(x, cfg.modes, axis_names)
+    yf = spectral_apply(xf, w_spec, use_pallas=cfg.use_pallas)
+    y = dfft.dist_adjoint_2d_eager(yf, cfg.grid, axis_names, out_dtype=cfg.dtype)
+    return jax.nn.gelu(y + _bypass(x, w_b, b_b))
+
+
 def _fno_forward_dist_impl(params, x, cfg, axis_name, block_fn):
     # Encoder/decoder weights are replicated (paper's broadcast B); the
     # convs contract channels only, so they are embarrassingly parallel
@@ -218,11 +267,37 @@ def fno_forward_dist_eager(params, x, cfg: FNOConfig, axis_name: str = "model"):
     return _fno_forward_dist_impl(params, x, cfg, axis_name, fno_block_dist_eager)
 
 
+def fno_forward_dist_2d(params, x, cfg: FNOConfig, axis_names=("mx", "my")):
+    return _fno_forward_dist_impl(params, x, cfg, tuple(axis_names), fno_block_dist_2d)
+
+
+def fno_forward_dist_2d_eager(params, x, cfg: FNOConfig, axis_names=("mx", "my")):
+    return _fno_forward_dist_impl(
+        params, x, cfg, tuple(axis_names), fno_block_dist_2d_eager
+    )
+
+
 _VARIANTS = {
     "paper": fno_forward_dist,
     "grady31": fno_forward_dist_31,
     "eager": fno_forward_dist_eager,
 }
+
+_VARIANTS_2D = {
+    "paper": fno_forward_dist_2d,
+    "eager": fno_forward_dist_2d_eager,
+}
+
+
+def input_spec(dp_axes, model_axis) -> P:
+    """PartitionSpec of the solution tensor [b, c, x, y, z, t]: batch over
+    the data axes, x (and y, for a pencil pair) over the model axes. The
+    single source of truth for make_dist_forward's in/out layout — reuse it
+    wherever explicit in_shardings must match the shard_map'd forward."""
+    if isinstance(model_axis, (tuple, list)):
+        ax_x, ax_y = model_axis
+        return P(dp_axes, None, ax_x, ax_y, None, None)
+    return P(dp_axes, None, model_axis, None, None, None)
 
 
 def make_dist_forward(
@@ -230,29 +305,47 @@ def make_dist_forward(
     cfg: FNOConfig,
     *,
     dp_axes=("data",),
-    model_axis: str = "model",
+    model_axis="model",
     variant: str = "paper",
 ):
     """Build the shard_map'd distributed forward for a mesh.
 
-    variant: "paper" (Alg. 2, truncate-then-repartition), "grady31"
-    (the [31] baseline), or "eager" (beyond-paper per-dim truncation).
+    ``model_axis``: a single mesh-axis name shards the solution along x
+    (paper Alg. 2); a PAIR of names, e.g. ``("mx", "my")``, selects the 2-D
+    pencil decomposition (x sharded by the first axis, y by the second),
+    lifting the 1-D parallelism cap from nx/2mx to (nx/2mx)*(ny/2my).
+
+    variant: "paper" (truncate-then-repartition), "grady31" (the [31]
+    baseline, 1-D only), or "eager" (beyond-paper per-dim truncation).
     """
-    cfg.validate_for_parallelism(mesh.shape[model_axis])
-    fwd = _VARIANTS[variant]
+    if isinstance(model_axis, (tuple, list)):
+        model_axes = tuple(model_axis)
+        if len(model_axes) != 2:
+            raise ValueError(f"expected 2 model axes, got {model_axes}")
+        cfg.validate_for_parallelism_2d(*(mesh.shape[a] for a in model_axes))
+        if variant not in _VARIANTS_2D:
+            raise ValueError(
+                f"variant {variant!r} has no 2-D schedule; pick from "
+                f"{sorted(_VARIANTS_2D)}"
+            )
+        fwd = _VARIANTS_2D[variant]
+        x_spec = input_spec(dp_axes, model_axes)
+        p_specs = param_specs(mesh, model_axes)
 
-    x_spec = P(dp_axes, None, model_axis, None, None, None)
-    p_specs = param_specs(mesh, model_axis)
+        def shard_fwd(params, x):
+            return fwd(params, x, cfg, model_axes)
 
-    def shard_fwd(params, x):
-        return fwd(params, x, cfg, model_axis)
+    else:
+        cfg.validate_for_parallelism(mesh.shape[model_axis])
+        fwd = _VARIANTS[variant]
+        x_spec = input_spec(dp_axes, model_axis)
+        p_specs = param_specs(mesh, model_axis)
 
-    return jax.shard_map(
-        shard_fwd,
-        mesh=mesh,
-        in_specs=(p_specs, x_spec),
-        out_specs=x_spec,
-        check_vma=False,
+        def shard_fwd(params, x):
+            return fwd(params, x, cfg, model_axis)
+
+    return compat.shard_map(
+        shard_fwd, mesh, (p_specs, x_spec), x_spec
     )
 
 

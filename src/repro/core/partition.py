@@ -15,6 +15,8 @@ from typing import Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.common import compat
+
 AxisName = Union[str, Tuple[str, ...]]
 
 
@@ -42,16 +44,49 @@ class CartPartition:
     def axis_of(self, dim: int) -> Optional[AxisName]:
         return self.dims[dim]
 
-    def with_moved(self, src_dim: int, dst_dim: int) -> "CartPartition":
-        """Partition after repartitioning src_dim -> dst_dim (R_{x->y})."""
-        axis = self.dims[src_dim]
-        if axis is None:
+    def with_moved(
+        self, src_dim: int, dst_dim: int, axis: Optional[str] = None
+    ) -> "CartPartition":
+        """Partition after repartitioning src_dim -> dst_dim (R_{x->y}).
+
+        ``axis`` selects WHICH mesh axis moves when src_dim is sharded by
+        several (pencil decomposition); omitted, the dim must be sharded by
+        exactly one axis and that axis moves. If dst_dim is already sharded,
+        the moved axis is appended to its axis tuple (innermost position),
+        so chained per-mesh-axis moves compose.
+        """
+        src_axes = self.dims[src_dim]
+        if src_axes is None:
             raise ValueError(f"dim {src_dim} is not sharded; cannot repartition")
-        if self.dims[dst_dim] is not None:
-            raise ValueError(f"dim {dst_dim} already sharded by {self.dims[dst_dim]}")
+        src_tuple = (src_axes,) if isinstance(src_axes, str) else tuple(src_axes)
+        if axis is None:
+            if len(src_tuple) != 1:
+                raise ValueError(
+                    f"dim {src_dim} sharded by multiple axes {src_tuple}; "
+                    "name the axis to move"
+                )
+            axis = src_tuple[0]
+        if axis not in src_tuple:
+            raise ValueError(f"dim {src_dim} not sharded by axis {axis!r}")
+        remaining = tuple(a for a in src_tuple if a != axis)
+        dst_axes = self.dims[dst_dim]
+        dst_tuple = (
+            () if dst_axes is None
+            else (dst_axes,) if isinstance(dst_axes, str)
+            else tuple(dst_axes)
+        )
+        if axis in dst_tuple:
+            raise ValueError(f"dim {dst_dim} already sharded by {axis!r}")
+        new_dst = dst_tuple + (axis,)
+
+        def _pack(axes: Tuple[str, ...]) -> Optional[AxisName]:
+            if not axes:
+                return None
+            return axes[0] if len(axes) == 1 else axes
+
         new = list(self.dims)
-        new[src_dim] = None
-        new[dst_dim] = axis
+        new[src_dim] = _pack(remaining)
+        new[dst_dim] = _pack(new_dst)
         return CartPartition(tuple(new))
 
     def validate(self, shape: Sequence[int], mesh: Mesh) -> None:
@@ -73,14 +108,10 @@ class CartPartition:
 def axis_size(mesh_or_none, axis: str) -> int:
     """Size of a named axis, from a Mesh or from inside shard_map."""
     if mesh_or_none is None:
-        return jax.lax.axis_size(axis)
+        return compat.axis_size(axis)
     return mesh_or_none.shape[axis]
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
-    """jax.make_mesh with explicit Auto axis types (silences 0.9 migration)."""
-    return jax.make_mesh(
-        tuple(shape),
-        tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    """Version-portable jax.make_mesh (Auto axis types where supported)."""
+    return compat.make_mesh(shape, axes)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.common import compat
 from repro.core import fno as fno_lib
 from repro.core.fno import FNOConfig
 
@@ -34,7 +35,7 @@ def _pipeline_blocks(blocks, h_micro, cfg: FNOConfig, axis_name: str):
     h_micro: [M, mb, width, nx, ny, nz, nt] replicated microbatch stack.
     Returns the same stack after all blocks, replicated via psum.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     stage = jax.lax.axis_index(axis_name)
     m = h_micro.shape[0]
     w_spec = blocks["w_spec"][0]
@@ -101,12 +102,11 @@ def make_pipeline_forward(
         h = fno_lib._encoder(params, x, cfg)
         h_micro = h.reshape((n_micro, b // n_micro) + h.shape[1:])
 
-        piped = jax.shard_map(
+        piped = compat.shard_map(
             lambda blocks, hm: _pipeline_blocks(blocks, hm, cfg, model_axis),
-            mesh=mesh,
-            in_specs=(block_specs, P()),
-            out_specs=P(),
-            check_vma=False,
+            mesh,
+            (block_specs, P()),
+            P(),
         )(params["blocks"], h_micro)
 
         h = piped.reshape((b,) + piped.shape[2:])

@@ -18,6 +18,8 @@ i.e. the paper's core communication pattern is a single reusable op here.
 """
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import jax
 
 
@@ -38,3 +40,29 @@ def repartition(x: jax.Array, src: int, dst: int, axis_name: str) -> jax.Array:
 def repartition_t(x: jax.Array, src: int, dst: int, axis_name: str) -> jax.Array:
     """Adjoint of ``repartition(., src, dst)`` = ``repartition(., dst, src)``."""
     return repartition(x, dst, src, axis_name)
+
+
+Move = Tuple[int, int, str]  # (src_dim, dst_dim, mesh_axis_name)
+
+
+def repartition_multi(x: jax.Array, moves: Sequence[Move]) -> jax.Array:
+    """Apply a sequence of per-mesh-axis moves back-to-back.
+
+    Each move (src, dst, axis) is an independent all-to-all over ONE named
+    mesh axis; the sharding of dims held by other mesh axes is untouched.
+    Note the pencil FFT in ``repro.core.dfft`` does NOT call this helper —
+    its two moves are interleaved with FFT/truncation steps — but performs
+    the equivalent per-axis ``repartition`` calls inline; this helper is for
+    schedules that re-partition several axes with no compute in between
+    (e.g. transposing a whole pencil layout in one shot).
+    """
+    for src, dst, axis_name in moves:
+        x = repartition(x, src, dst, axis_name)
+    return x
+
+
+def repartition_multi_t(x: jax.Array, moves: Sequence[Move]) -> jax.Array:
+    """Adjoint of ``repartition_multi``: reversed moves, each transposed."""
+    for src, dst, axis_name in reversed(moves):
+        x = repartition(x, dst, src, axis_name)
+    return x

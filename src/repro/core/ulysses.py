@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.common import compat
 from repro.core.repartition import repartition
 
 
@@ -38,7 +39,7 @@ def ulysses_attention(
     attn_fn(q, k, v, causal, scale) computes local attention with layout
     [b, s, h, d]; defaults to a dense reference. Returns [b, s/P, h, d].
     """
-    p = jax.lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     h = q.shape[2]
     kvh = k.shape[2]
     if h % p:

@@ -20,12 +20,13 @@ from repro.configs import (
     cell_supported,
     get_arch,
     get_fno,
+    get_fno_model_axes,
     get_shape,
     input_specs,
 )
 from repro.core import fno as fno_lib
 from repro.launch import hlo_analysis
-from repro.launch.mesh import dp_axes_for, make_production_mesh
+from repro.launch.mesh import dp_axes_for, make_pencil_mesh, make_production_mesh
 from repro.models import transformer as tf_lib
 from repro.models import whisper as wh_lib
 from repro.models.policy import ParallelPolicy
@@ -175,21 +176,39 @@ def build_fno_cell(fno_id: str, shape_name: str, mesh, *, variant: str = "paper"
         cfg = dataclasses.replace(cfg, dtype=fno_dtype)
     shape = {name: (bsz, kind) for name, bsz, kind in shapes}[shape_name]
     bsz, kind = shape
+    model_axis, pencil = get_fno_model_axes(fno_id)
+    if isinstance(model_axis, tuple):
+        # Pencil config: re-carve the production device pool into a
+        # ("data", "mx", "my") mesh of the same total size so the lowered
+        # HLO actually contains the 2-D schedule's two all-to-alls.
+        px, py = pencil
+        if mesh.size % (px * py):
+            raise ValueError(
+                f"{fno_id}: pencil {pencil} does not divide mesh size {mesh.size}"
+            )
+        mesh = make_pencil_mesh(mesh.size // (px * py), px, py)
+        if variant not in ("paper", "eager"):
+            # grady31 has no 2-D schedule; make the substitution visible so
+            # a --variant grady31 sweep knows this cell has no baseline.
+            print(f"NOTE {fno_id}: variant {variant!r} has no 2-D schedule; "
+                  "lowering 'paper' instead")
+            variant = "paper"
     dp = dp_axes_for(mesh)
     key = jax.random.PRNGKey(0)
     abstract_params = jax.eval_shape(functools.partial(fno_lib.init_params, cfg=cfg), key)
-    p_specs = fno_lib.param_specs(mesh)
+    p_specs = fno_lib.param_specs(mesh, model_axis)
     params_sh = _ns(mesh, p_specs, abstract_params)
-    fwd = fno_lib.make_dist_forward(mesh, cfg, dp_axes=dp, model_axis="model", variant=variant)
+    fwd = fno_lib.make_dist_forward(mesh, cfg, dp_axes=dp, model_axis=model_axis, variant=variant)
     nx, ny, nz, nt = cfg.grid
-    x_spec = P(dp, None, "model", None, None, None)
+    x_spec = fno_lib.input_spec(dp, model_axis)
     x_abs = jax.ShapeDtypeStruct((bsz, cfg.in_channels, nx, ny, nz, nt), jnp.float32)
     y_abs = jax.ShapeDtypeStruct((bsz, cfg.out_channels, nx, ny, nz, nt), jnp.float32)
     x_sh = NamedSharding(mesh, _safe(x_spec, x_abs.shape, mesh))
 
+    cell_meta = {"mesh": mesh, "variant": variant}
     if kind == "infer":
         jitted = jax.jit(fwd, in_shardings=(params_sh, x_sh), out_shardings=x_sh)
-        return jitted, (abstract_params, x_abs), cfg
+        return jitted, (abstract_params, x_abs), cfg, cell_meta
 
     def loss_fn(p, batch):
         pred = fwd(p, batch["x"])
@@ -206,7 +225,7 @@ def build_fno_cell(fno_id: str, shape_name: str, mesh, *, variant: str = "paper"
         out_shardings=(params_sh, opt_sh, None),
         donate_argnums=(0, 1),
     )
-    return jitted, (abstract_params, abstract_opt, {"x": x_abs, "y": y_abs}), cfg
+    return jitted, (abstract_params, abstract_opt, {"x": x_abs, "y": y_abs}), cfg, cell_meta
 
 
 # ---------------------------------------------------------------------------
@@ -258,7 +277,11 @@ def run_cell(
     n_dev = mesh.size
     t0 = time.time()
     if kind == "fno":
-        jitted, args, cfg = build_fno_cell(arch_id, shape_name, mesh, variant=variant, fno_dtype=fno_dtype)
+        jitted, args, cfg, cell_meta = build_fno_cell(arch_id, shape_name, mesh, variant=variant, fno_dtype=fno_dtype)
+        # Pencil configs re-carve the mesh and may coerce the variant;
+        # record what was actually lowered, not what was requested.
+        mesh, variant = cell_meta["mesh"], cell_meta["variant"]
+        n_dev = mesh.size
         shape_kind = dict((n, k) for n, _, k in get_fno(arch_id)[1])[shape_name]
         mf = model_flops_fno(cfg, [b for n, b, _ in get_fno(arch_id)[1] if n == shape_name][0], shape_kind)
         n_params = tree_params(jax.eval_shape(functools.partial(fno_lib.init_params, cfg=cfg), jax.random.PRNGKey(0)))

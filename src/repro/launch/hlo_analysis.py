@@ -35,8 +35,12 @@ _WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\
 _CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _DEF_RE = re.compile(r"^%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},.]+))")
 _HEADER_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([\w\[\],]+)")
+# Operands may carry inline types ("dot(f32[64,64]{1,0} %lhs, ...)"), which
+# newer HLO emitters always print; the type prefix is optional here.
 _DOT_RE = re.compile(
-    r"=\s*(?P<result>[\w\[\]{},.]+)\s+dot\(%?(?P<lhs>[\w.\-]+),\s*%?(?P<rhs>[\w.\-]+)\)"
+    r"=\s*(?P<result>[\w\[\]{},.]+)\s+dot\("
+    r"(?:[\w\[\]{},.]+\s+)?%?(?P<lhs>[\w.\-]+),\s*"
+    r"(?:[\w\[\]{},.]+\s+)?%?(?P<rhs>[\w.\-]+)\)"
     r".*?lhs_contracting_dims=\{(?P<lcd>[\d,]*)\}"
 )
 _FFT_RE = re.compile(r"=\s*(?P<result>[\w\[\]{},.]+)\s+fft\(.*?fft_length=\{(?P<len>[\d,]+)\}")
@@ -44,6 +48,9 @@ _COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
 _GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
 _CONST_RE = re.compile(r"=\s*[su]32\[\]\s*constant\((\d+)\)")
+# XLA annotates canonicalized loops with the exact trip count; prefer it
+# over reverse-engineering the condition's compare constant.
+_KNOWN_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
 
 
 def _shape_bytes(result: str) -> int:
@@ -159,7 +166,11 @@ def _multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
             m = _WHILE_RE.search(line)
             if m:
                 cond, body = m.group(1), m.group(2)
-                trips = _trip_count(comps.get(cond, []))
+                known = _KNOWN_TRIP_RE.search(line)
+                if known:
+                    trips = int(known.group(1))
+                else:
+                    trips = _trip_count(comps.get(cond, []))
                 pending.append((cname, cond, 1))
                 pending.append((cname, body, trips))
                 continue

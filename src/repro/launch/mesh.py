@@ -2,8 +2,7 @@
 importing this module never touches jax device state)."""
 from __future__ import annotations
 
-import jax
-
+from repro.common import compat
 from repro.common.constants import (
     MULTIPOD_MESH_AXES,
     MULTIPOD_MESH_SHAPE,
@@ -11,15 +10,22 @@ from repro.common.constants import (
     POD_MESH_SHAPE,
 )
 
+# Axis names understood as model-parallel: "model" (1-D, paper Alg. 2) and
+# the ("mx", "my") pair (2-D pencil decomposition).
+MODEL_AXIS_NAMES = ("model", "mx", "my")
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTIPOD_MESH_SHAPE if multi_pod else POD_MESH_SHAPE
     axes = MULTIPOD_MESH_AXES if multi_pod else POD_MESH_AXES
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
+
+
+def make_pencil_mesh(n_data: int, n_x: int, n_y: int):
+    """("data", "mx", "my") mesh for the 2-D pencil-decomposed FNO."""
+    return compat.make_mesh((n_data, n_x, n_y), ("data", "mx", "my"))
 
 
 def dp_axes_for(mesh) -> tuple:
-    """Data-parallel axes: every axis that is not the model axis."""
-    return tuple(a for a in mesh.axis_names if a != "model")
+    """Data-parallel axes: every axis that is not a model axis."""
+    return tuple(a for a in mesh.axis_names if a not in MODEL_AXIS_NAMES)

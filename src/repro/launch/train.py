@@ -86,6 +86,12 @@ def main():
     ap.add_argument("--width", type=int, default=8)
     ap.add_argument("--n-data", type=int, default=16)
     ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument(
+        "--model-shards", type=int, nargs="+", default=[1],
+        help="fno mode: model-parallel shards. One value P shards the "
+        "solution along x (paper Alg. 2); two values PX PY use the 2-D "
+        "pencil decomposition on a ('mx','my') mesh.",
+    )
     args = ap.parse_args()
 
     opt_cfg = AdamWConfig(
@@ -109,9 +115,45 @@ def main():
         if x_all is None:
             x_all, y_all = synthetic_fno_data(cfg, args.n_data)
 
-        def loss_fn(params, batch):
-            pred = fno_forward(params, batch["x"], cfg)
-            return mse_loss(pred, batch["y"]), {}
+        model_shards = tuple(args.model_shards)
+        if len(model_shards) > 2:
+            raise SystemExit(
+                f"--model-shards takes 1 (x-decomposition) or 2 (x,y pencil) "
+                f"values, got {len(model_shards)}: {model_shards}"
+            )
+        n_model = 1
+        for s in model_shards:
+            n_model *= s
+        if n_model > 1:
+            from repro.core import make_dist_forward
+            from repro.launch.mesh import make_pencil_mesh
+            from repro.core.partition import make_mesh as _make_mesh
+
+            if args.devices % n_model:
+                raise SystemExit(
+                    f"--devices {args.devices} not divisible by "
+                    f"{n_model} model shards"
+                )
+            n_dp = args.devices // n_model
+            if len(model_shards) == 1:
+                mesh = _make_mesh((n_dp, model_shards[0]), ("data", "model"))
+                model_axis = "model"
+            else:
+                mesh = make_pencil_mesh(n_dp, *model_shards)
+                model_axis = ("mx", "my")
+            dist_fwd = make_dist_forward(
+                mesh, cfg, dp_axes=("data",), model_axis=model_axis
+            )
+
+            def loss_fn(params, batch):
+                pred = dist_fwd(params, batch["x"])
+                return mse_loss(pred, batch["y"]), {}
+
+        else:
+
+            def loss_fn(params, batch):
+                pred = fno_forward(params, batch["x"], cfg)
+                return mse_loss(pred, batch["y"]), {}
 
         init_fn = functools.partial(init_params, cfg=cfg)
         batches = fno_batch_iter(x_all, y_all, args.batch)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
 from repro.models import layers
 from repro.models.policy import ParallelPolicy, LOCAL
 
@@ -217,12 +218,11 @@ def moe_apply(
         }
         routed = {k: params[k] for k in specs}
         all_axes = tuple(a for grp in (dp, (mx,)) for a in (grp if isinstance(grp, tuple) else (grp,)))
-        y, aux = jax.shard_map(
+        y, aux = compat.shard_map(
             lambda pr, xx: _moe_ep_shard(pr, xx, moe, mx, all_axes),
-            mesh=mesh,
-            in_specs=(specs, P(dp, mx, None)),
-            out_specs=(P(dp, mx, None), P()),
-            check_vma=False,
+            mesh,
+            (specs, P(dp, mx, None)),
+            (P(dp, mx, None), P()),
         )(routed, x)
         y = policy.shard_act(y)
     else:

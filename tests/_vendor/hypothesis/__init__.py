@@ -1,0 +1,177 @@
+"""Deterministic fallback for the subset of `hypothesis` this suite uses.
+
+The real hypothesis is declared in requirements-dev.txt and is preferred
+whenever importable; conftest.py only puts this package on sys.path when
+`import hypothesis` fails (e.g. a hermetic container without the wheel).
+
+Supported surface: @given(**strategies), @settings(max_examples, deadline),
+strategies.{integers,floats,booleans,sampled_from,tuples,lists,just,
+composite-free map/filter}, assume(), and the settings-above-given or
+given-above-settings decoration orders. Examples are drawn from a PRNG
+seeded by the test's qualified name, so runs are reproducible; a failing
+example is re-raised with the drawn values attached.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__version__ = "0.0-repro-fallback"
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Skip the current example when the assumption fails."""
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, f) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _UnsatisfiedAssumption()
+
+        return SearchStrategy(draw)
+
+
+class _Strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    SearchStrategy = SearchStrategy
+
+    @staticmethod
+    def integers(min_value=-(2**31), max_value=2**31) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements) -> SearchStrategy:
+        elements = list(elements)
+        if not elements:
+            raise ValueError("sampled_from requires a non-empty collection")
+        return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    @staticmethod
+    def just(value) -> SearchStrategy:
+        return SearchStrategy(lambda rng: value)
+
+    @staticmethod
+    def tuples(*strats) -> SearchStrategy:
+        return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10) -> SearchStrategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+
+        return SearchStrategy(draw)
+
+
+strategies = _Strategies()
+
+
+class settings:
+    """Decorator recording example budget; composes with @given either way."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._hypothesis_settings = self
+        return fn
+
+
+class _HypothesisHandle:
+    def __init__(self, inner_test):
+        self.inner_test = inner_test
+
+
+def given(*arg_strats, **kw_strats):
+    if arg_strats:
+        raise TypeError(
+            "the hypothesis fallback supports keyword strategies only; "
+            "write @given(x=st.integers(...), ...)"
+        )
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_hypothesis_settings", None) or getattr(
+                fn, "_hypothesis_settings", None
+            )
+            n = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode("utf-8")))
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < 50 * n:
+                attempts += 1
+                drawn = {k: s.draw(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except _UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__}): {drawn!r}"
+                    ) from e
+                ran += 1
+            if ran == 0:
+                # Mirror real hypothesis: a test whose assumptions rejected
+                # every draw verified nothing and must not pass silently.
+                raise AssertionError(
+                    f"{fn.__qualname__}: no examples satisfied the "
+                    f"assumptions in {attempts} attempts"
+                )
+
+        # Pytest plugins (anyio, hypothesis's own) probe fn.hypothesis.inner_test.
+        wrapper.hypothesis = _HypothesisHandle(fn)
+        # Hide the strategy-filled params from pytest's fixture resolution:
+        # the wrapper is called with no arguments, like real hypothesis.
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+class HealthCheck:
+    """Placeholder matching hypothesis.HealthCheck names used in suppression."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]

@@ -2,7 +2,7 @@
 
 Executed as a subprocess by test_distributed.py (the device-count flag must
 be set before jax initializes, so this cannot run inside the main pytest
-process, which must keep seeing 1 device for the smoke tests).
+process, whose device count is environment-dependent).
 """
 import os
 
@@ -21,6 +21,7 @@ from repro.core import (
     FNOConfig, fno_forward, init_params, make_dist_forward,
     make_pipeline_forward, param_specs, repartition, ulysses_attention,
 )
+from repro.common.compat import shard_map
 from repro.core.partition import make_mesh
 from repro.core.ulysses import _dense_attention
 
@@ -42,20 +43,20 @@ def repartition_roundtrip_and_adjoint():
         b = repartition(a, src=1, dst=2, axis_name="model")
         return repartition(b, src=2, dst=1, axis_name="model")
 
-    y = jax.jit(jax.shard_map(rt, mesh=mesh, in_specs=P(None, "model", None),
-                              out_specs=P(None, "model", None), check_vma=False))(x)
+    y = jax.jit(shard_map(rt, mesh, P(None, "model", None),
+                          P(None, "model", None)))(x)
     assert bool(jnp.all(y == x)), "repartition roundtrip failed"
 
     # adjoint: <R x, y> == <x, R^T y>
     key = jax.random.PRNGKey(0)
     a = jax.random.normal(key, (2, 8, 16))
     b = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
-    fwd = jax.jit(jax.shard_map(
-        lambda t: repartition(t, 1, 2, "model"), mesh=mesh,
-        in_specs=P(None, "model", None), out_specs=P(None, None, "model"), check_vma=False))
-    bwd = jax.jit(jax.shard_map(
-        lambda t: repartition(t, 2, 1, "model"), mesh=mesh,
-        in_specs=P(None, None, "model"), out_specs=P(None, "model", None), check_vma=False))
+    fwd = jax.jit(shard_map(
+        lambda t: repartition(t, 1, 2, "model"), mesh,
+        P(None, "model", None), P(None, None, "model")))
+    bwd = jax.jit(shard_map(
+        lambda t: repartition(t, 2, 1, "model"), mesh,
+        P(None, None, "model"), P(None, "model", None)))
     lhs = jnp.vdot(fwd(a), fwd(jnp.zeros_like(a)) * 0 + fwd(a) * 0 + fwd(b) * 0 + fwd(b))
     # simpler: <R a, R b> == <a, b> (R is orthogonal permutation)
     lhs = jnp.vdot(fwd(a), fwd(b))
@@ -88,6 +89,30 @@ def fno_dist_matches_serial():
 
 
 @check
+def fno_dist_2d_pencil_matches_serial():
+    """2-D pencil decomposition (2 data x 2 mx x 2 my) == serial oracle."""
+    cfg = FNOConfig(grid=(16, 16, 8, 8), modes=(4, 4, 2, 3), width=6,
+                    in_channels=2, out_channels=1, n_blocks=3, decoder_dim=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 16, 16, 8, 8))
+    y_ser = jax.jit(lambda p, x: fno_forward(p, x, cfg))(params, x)
+    mesh = make_mesh((2, 2, 2), ("data", "mx", "my"))
+    for variant in ("paper", "eager"):
+        fwd = make_dist_forward(mesh, cfg, dp_axes=("data",),
+                                model_axis=("mx", "my"), variant=variant)
+        y = jax.jit(fwd)(params, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ser), rtol=2e-4, atol=2e-5)
+    # gradient equivalence through both all-to-alls
+    g_ser = jax.jit(jax.grad(lambda p: jnp.mean(fno_forward(p, x, cfg) ** 2)))(params)
+    fwd = make_dist_forward(mesh, cfg, dp_axes=("data",), model_axis=("mx", "my"))
+    g_dd = jax.jit(jax.grad(lambda p: jnp.mean(fwd(p, x) ** 2)))(params)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-5),
+        g_dd, g_ser,
+    )
+
+
+@check
 def pipeline_matches_serial():
     cfg = FNOConfig(grid=(16, 16, 8, 8), modes=(4, 4, 2, 3), width=6,
                     in_channels=1, out_channels=1, n_blocks=4, decoder_dim=8)
@@ -109,12 +134,11 @@ def ulysses_matches_dense():
     k = jax.random.normal(ks[1], (b, s, kvh, d))
     v = jax.random.normal(ks[2], (b, s, kvh, d))
     ref = _dense_attention(q, k, v, causal=True, scale=None)
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda q, k, v: ulysses_attention(q, k, v, "model", causal=True),
-        mesh=mesh,
-        in_specs=(P(None, "model"), P(None, "model"), P(None, "model")),
-        out_specs=P(None, "model"),
-        check_vma=False,
+        mesh,
+        (P(None, "model"), P(None, "model"), P(None, "model")),
+        P(None, "model"),
     )
     out = jax.jit(fn)(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
@@ -122,12 +146,11 @@ def ulysses_matches_dense():
     k2 = k[:, :, :2]
     v2 = v[:, :, :2]
     ref2 = _dense_attention(q, k2, v2, causal=True, scale=None)
-    fn2 = jax.shard_map(
+    fn2 = shard_map(
         lambda q, k, v: ulysses_attention(q, k, v, "model", causal=True),
-        mesh=mesh,
-        in_specs=(P(None, "model"), P(None, "model"), P(None, "model")),
-        out_specs=P(None, "model"),
-        check_vma=False,
+        mesh,
+        (P(None, "model"), P(None, "model"), P(None, "model")),
+        P(None, "model"),
     )
     out2 = jax.jit(fn2)(q, k2, v2)
     np.testing.assert_allclose(np.asarray(out2), np.asarray(ref2), rtol=2e-4, atol=2e-5)
@@ -226,9 +249,9 @@ def compressed_allreduce_error_feedback():
                 g_local[0], err_local[0], "data", ratio=ratio
             )
             return red, new_err[None]
-        return jax.jit(jax.shard_map(
-            body, mesh=mesh, in_specs=(P("data", None), P("data", None)),
-            out_specs=(P(None), P("data", None)), check_vma=False,
+        return jax.jit(shard_map(
+            body, mesh, (P("data", None), P("data", None)),
+            (P(None), P("data", None)),
         ))(gs, jnp.zeros((8, 256)))
 
     # ratio=1.0 -> lossless: equals dense mean

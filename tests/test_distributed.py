@@ -1,6 +1,7 @@
 """Multi-device (8 simulated hosts) equivalence tests, via subprocess —
-the device-count flag must be set before jax initializes, and the main
-pytest process must keep seeing 1 device."""
+the device-count flag must be set before jax initializes, so the checks
+cannot import jax in the main pytest process (whose device count is
+environment-dependent: 1 locally, 8 under the CI flag)."""
 import os
 import subprocess
 import sys

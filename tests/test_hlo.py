@@ -38,12 +38,12 @@ def test_collective_bytes_and_groups():
         sys.path.insert(0, %r)
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.common import compat
         from repro.core.partition import make_mesh
         from repro.launch import hlo_analysis as ha
 
         mesh = make_mesh((8,), ("d",))
-        fn = jax.shard_map(lambda x: jax.lax.psum(x, "d"), mesh=mesh,
-                           in_specs=P("d"), out_specs=P(), check_vma=False)
+        fn = compat.shard_map(lambda x: jax.lax.psum(x, "d"), mesh, P("d"), P())
         hlo = jax.jit(fn).lower(jax.ShapeDtypeStruct((8, 1024), jnp.float32)).compile().as_text()
         st = ha.collect_collectives(hlo, 8)
         expected = 2 * 1024 * 4 * 7 / 8
