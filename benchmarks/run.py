@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV lines (derived = compact JSON).
   table1_train    FNO surrogate quality, NS + CO2 (Table I, scale-reduced)
   cost_speedup    5-orders speedup + 3200x cost claims (§V)
   roofline        three-term roofline summary over dry-run artifacts
+  loader          sharded-loader throughput, prefetch on/off overlap
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_cloud, bench_comm, bench_cost, bench_scaling, bench_train
+    from benchmarks import bench_cloud, bench_comm, bench_cost, bench_loader, bench_scaling, bench_train
     from benchmarks import roofline
 
     entries = [
@@ -27,6 +28,7 @@ def main() -> None:
         ("table1_train", bench_train.run),
         ("cost_speedup", bench_cost.run),
         ("roofline", roofline.run),
+        ("loader", bench_loader.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failures = 0

@@ -56,6 +56,10 @@ class TaskRecord:
     started: Optional[float] = None
     runtime_s: Optional[float] = None
     speculated: bool = False
+    # BlobRefs of the first submission's uploaded args, reused verbatim by
+    # speculative resubmission (paper Fig. 4a: the argument upload dominates
+    # submission cost, so backup tasks must not pay it twice).
+    arg_refs: Optional[List[BlobRef]] = None
 
 
 class BatchFuture:
@@ -116,7 +120,9 @@ class BatchPool:
         task_id = self._next_id
         self._next_id += 1
         inner = self.backend.submit(self.store_root, fn, arg_refs, task_id)
-        self.records[task_id] = TaskRecord(task_id, submitted_at=time.time())
+        self.records[task_id] = TaskRecord(
+            task_id, submitted_at=time.time(), arg_refs=arg_refs
+        )
         self.submit_times.append(time.time() - t0)
         return BatchFuture(self, task_id, inner)
 
@@ -131,9 +137,9 @@ class BatchPool:
         futures = [self.submit(fn, args) for args in args_list]
         if not speculative:
             return [f.result() for f in futures]
-        return self._map_speculative(fn, args_list, futures, straggler_factor)
+        return self._map_speculative(fn, futures, straggler_factor)
 
-    def _map_speculative(self, fn, args_list, futures, factor):
+    def _map_speculative(self, fn, futures, factor):
         """Re-submit laggards once >60% of tasks finished (backup tasks)."""
         results: dict = {}
         runtimes: List[float] = []
@@ -154,10 +160,9 @@ class BatchPool:
                         continue
                     waited = time.time() - self.records[f.task_id].submitted_at
                     if waited > factor * max(median, 1e-3):
-                        arg_refs = [
-                            a if isinstance(a, BlobRef) else self.store.put(a)
-                            for a in args_list[i]
-                        ]
+                        # args were uploaded (or content-addressed) at first
+                        # submission; reuse those refs instead of re-uploading
+                        arg_refs = self.records[f.task_id].arg_refs
                         f.add_speculative(
                             self.backend.submit(self.store_root, fn, arg_refs, f.task_id)
                         )

@@ -52,6 +52,34 @@ def axis_size(axis_name: str):
     return jax.lax.psum(1, axis_name)
 
 
+def make_global_array(shape, sharding, fetch):
+    """Assemble a globally-sharded ``jax.Array`` from per-shard host reads.
+
+    ``fetch(index)`` receives a normalized tuple of ``slice`` objects (one
+    per dim, concrete start/stop) and must return the numpy block for that
+    shard. It is called once per UNIQUE shard index — replicated shards
+    (e.g. across a data-parallel axis that doesn't split the dim) reuse the
+    first fetch — which is what keeps per-process reads proportional to the
+    process's share of the data, not the global array.
+
+    ``jax.make_array_from_callback`` exists on every supported jax (0.4.x
+    and modern); the per-version drift is only in how indices are
+    normalized, which is handled here so call sites stay version-free.
+    """
+    shape = tuple(shape)
+    memo = {}
+
+    def cb(index):
+        norm = tuple(sl.indices(dim) for sl, dim in zip(index, shape))
+        if norm not in memo:
+            memo[norm] = fetch(
+                tuple(slice(a, b, c) for a, b, c in norm)
+            )
+        return memo[norm]
+
+    return jax.make_array_from_callback(shape, sharding, cb)
+
+
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     """``jax.make_mesh`` with explicit Auto axis types where supported.
 

@@ -118,12 +118,15 @@ def param_specs(mesh: Mesh, model_axis="model") -> dict:
     """PartitionSpecs: spectral weights sharded along k_y (paper Alg. 2);
     encoder/decoder/bypass replicated (the paper's broadcast B).
 
-    ``model_axis`` may be a single axis name (1-D: shard k_y) or a pair
+    ``model_axis`` may be a single axis name (1-D: shard k_y), a pair
     (2-D pencil: shard k_y by the x-mesh axis and k_z by the y-mesh axis —
-    the dims each shard lands on after the pencil forward's repartitions).
+    the dims each shard lands on after the pencil forward's repartitions),
+    or None (pure data parallelism: everything replicated).
     """
     del mesh
-    if isinstance(model_axis, (tuple, list)):
+    if model_axis is None:
+        w_spec = P()
+    elif isinstance(model_axis, (tuple, list)):
         ax_x, ax_y = model_axis
         w_spec = P(None, None, None, None, ax_x, ax_y, None)
     else:
@@ -293,7 +296,10 @@ def input_spec(dp_axes, model_axis) -> P:
     """PartitionSpec of the solution tensor [b, c, x, y, z, t]: batch over
     the data axes, x (and y, for a pencil pair) over the model axes. The
     single source of truth for make_dist_forward's in/out layout — reuse it
-    wherever explicit in_shardings must match the shard_map'd forward."""
+    wherever explicit in_shardings must match the shard_map'd forward.
+    ``model_axis=None`` shards the batch dim only (pure data parallelism)."""
+    if model_axis is None:
+        return P(dp_axes, None, None, None, None, None)
     if isinstance(model_axis, (tuple, list)):
         ax_x, ax_y = model_axis
         return P(dp_axes, None, ax_x, ax_y, None, None)

@@ -1,2 +1,3 @@
+from repro.data.loader import NdArraySource, ShardedDatasetLoader  # noqa: F401
 from repro.data.store import ArrayStore  # noqa: F401
 from repro.data.tokens import StoreTokens, SyntheticTokens  # noqa: F401

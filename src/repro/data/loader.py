@@ -1,0 +1,344 @@
+"""Domain-decomposed dataset loader: every device reads only its chunk.
+
+The paper's training loop has each GPU pull just its spatial shard of every
+training pair straight from blob storage (Zarr chunks), instead of every
+host materializing the whole dataset. ``ShardedDatasetLoader`` reproduces
+that contract on top of ``ArrayStore``:
+
+  * shard-local IO — for each device of the batch sharding, only the store
+    chunks overlapping that device's ``(mx, my)`` pencil (and its slice of
+    the batch dim) are read, via ``ArrayStore.read_slice``;
+  * global assembly — the per-shard host blocks become one globally-sharded
+    ``jax.Array`` through ``compat.make_global_array`` (replicated shards
+    are fetched once), so the jitted step sees data already laid out for
+    its in_shardings and no resharding collective is emitted;
+  * overlap — a background thread prefetches the next batches' host blocks
+    (double-buffered by default) while the accelerator computes; assembly
+    and device transfer stay on the caller's thread;
+  * determinism — batch t is a pure function of (seed, t): samples follow
+    per-epoch ``PRNG(seed, epoch)`` permutations, so a restarted worker
+    replays exactly the batch it crashed on (the fault supervisor's
+    contract) and every process draws the same global order;
+  * normalization — per-channel (mean, std) from the store's ``meta.json``
+    ``stats`` (written by the datagen CLI's streaming Welford pass) are
+    applied on the host blocks, shard-locally.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import compat
+from repro.data.store import ArrayStore
+
+
+class NdArraySource:
+    """In-memory stand-in for an ArrayStore (synthetic-data path): exposes
+    the same ``shape`` / ``read_slice`` / ``meta`` surface over an ndarray,
+    so the loader's sharded assembly and prefetch are exercised identically
+    whether samples come from blob storage or RAM."""
+
+    def __init__(self, array: np.ndarray, stats: Optional[dict] = None):
+        self.array = np.asarray(array)
+        self.shape = self.array.shape
+        self.meta = {"stats": stats} if stats else {}
+
+    def read_slice(self, slices: Sequence[slice]) -> np.ndarray:
+        return self.array[tuple(slices)]
+
+
+def _norm_params(source, dtype=np.float32):
+    """(mean, std) arrays broadcastable over [b, c, ...] or None."""
+    stats = (getattr(source, "meta", None) or {}).get("stats")
+    if not stats:
+        return None
+    ndim = len(source.shape)
+    bshape = (1, -1) + (1,) * (ndim - 2)
+    mean = np.asarray(stats["mean"], dtype).reshape(bshape)
+    std = np.maximum(np.asarray(stats["std"], dtype).reshape(bshape), 1e-6)
+    return mean, std
+
+
+class _Prefetcher:
+    """Background producer of ``fetch(step)`` results, double-buffered.
+
+    The producer runs ``depth`` steps ahead of the consumer. ``get(step)``
+    normally pops a ready result; a non-sequential request (restart from a
+    checkpointed step) resets the pipeline and computes synchronously once.
+    """
+
+    def __init__(self, fetch, depth: int = 2):
+        self._fetch = fetch
+        self._depth = max(1, depth)
+        self._lock = threading.Lock()
+        self._ready: Dict[int, object] = {}
+        self._cv = threading.Condition(self._lock)
+        self._next = 0          # next step the producer should fetch
+        self._gen = 0           # bumped on reset; stale results are dropped
+        self._stopped = False
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._stopped and len(self._ready) >= self._depth:
+                    self._cv.wait()
+                if self._stopped:
+                    return
+                step, gen = self._next, self._gen
+                self._next += 1
+            try:
+                data = self._fetch(step)
+            except BaseException as e:  # surface IO errors to the consumer
+                with self._cv:
+                    self._error = e
+                    self._stopped = True
+                    self._cv.notify_all()
+                return
+            with self._cv:
+                if gen == self._gen:  # drop results from before a reset
+                    self._ready[step] = data
+                    self._cv.notify_all()
+
+    def _restart(self, step: int):
+        """Reset the pipeline to produce step+1 onwards (lock held). Clears
+        a dead producer's error so one bad background fetch never poisons
+        later steps — the caller fetches ``step`` synchronously, which
+        re-raises with correct attribution if THIS step is the broken one."""
+        self._gen += 1
+        self._ready.clear()
+        self._error = None
+        self._next = step + 1
+        self._cv.notify_all()
+        if self._stopped:
+            self._stopped = False
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+
+    def get(self, step: int):
+        with self._cv:
+            if step in self._ready:
+                data = self._ready.pop(step)
+                self._cv.notify_all()
+                return data
+            # sequential requests keep the pipeline: the producer is either
+            # computing this step (step == _next - 1) or about to claim it
+            # (step == _next with queue space); anything else — an
+            # out-of-order replay after restore, a forward jump, or a dead
+            # producer — resets and fetches synchronously once.
+            sequential = (
+                self._error is None
+                and not self._stopped
+                and (
+                    step == self._next - 1
+                    or (step == self._next and len(self._ready) < self._depth)
+                )
+            )
+            if not sequential:
+                self._restart(step)
+        if not sequential:
+            return self._fetch(step)
+        with self._cv:
+            while (
+                step not in self._ready
+                and not self._stopped
+                and self._error is None
+            ):
+                self._cv.wait()
+            if step in self._ready:
+                data = self._ready.pop(step)
+                self._cv.notify_all()
+                return data
+            self._restart(step)
+        return self._fetch(step)
+
+    def stop(self):
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5)
+
+
+class ShardedDatasetLoader:
+    """Assemble globally-sharded training batches from chunked stores.
+
+    ``sources`` maps batch keys to ArrayStore-like objects whose layout is
+    ``[n_samples, channels, *spatial]``; ``specs`` maps the same keys to the
+    batch PartitionSpec on ``mesh`` (dim 0 = batch, rest = sample dims), the
+    same specs handed to ``shard_train_step`` — one source of truth for the
+    data layout on both sides.
+    """
+
+    def __init__(
+        self,
+        sources: Dict[str, object],
+        mesh: Mesh,
+        batch_size: int,
+        specs: Dict[str, P],
+        *,
+        seed: int = 0,
+        shuffle: bool = True,
+        normalize: Sequence[str] = ("x",),
+        prefetch: int = 2,
+        device_filter=None,
+    ):
+        assert set(sources) == set(specs), (sources.keys(), specs.keys())
+        self.sources = dict(sources)
+        self.mesh = mesh
+        self.batch_size = int(batch_size)
+        self.specs = dict(specs)
+        self.seed = seed
+        self.shuffle = shuffle
+        self._norm = {
+            k: _norm_params(self.sources[k]) if k in tuple(normalize) else None
+            for k in self.sources
+        }
+        ns = {s.shape[0] for s in self.sources.values()}
+        if len(ns) != 1:
+            raise ValueError(f"sources disagree on sample count: {ns}")
+        self.n_samples = ns.pop()
+        if self.n_samples < 1:
+            raise ValueError("empty dataset")
+        self._device_filter = device_filter
+        self._shardings = {
+            k: NamedSharding(mesh, spec) for k, spec in self.specs.items()
+        }
+        self._global_shapes = {
+            k: (self.batch_size,) + tuple(self.sources[k].shape[1:])
+            for k in self.sources
+        }
+        for k, sharding in self._shardings.items():
+            # fail fast on indivisible layouts (the analog of
+            # CartPartition.validate for the data pipeline)
+            sharding.shard_shape(self._global_shapes[k])
+        self._shard_plan = {}
+        self._prefetcher = (
+            _Prefetcher(self._read_host_batch, depth=prefetch) if prefetch else None
+        )
+
+    # -- deterministic sample schedule -------------------------------------
+    def sample_ids(self, step: int) -> np.ndarray:
+        """Global sample ids of batch ``step`` (pure function of seed/step)."""
+        n, b = self.n_samples, self.batch_size
+        positions = np.arange(step * b, (step + 1) * b)
+        epochs, offsets = positions // n, positions % n
+        ids = np.empty(b, np.int64)
+        for e in np.unique(epochs):
+            if self.shuffle:
+                perm = np.random.default_rng(
+                    np.random.SeedSequence([self.seed, int(e)])
+                ).permutation(n)
+            else:
+                perm = np.arange(n)
+            sel = epochs == e
+            ids[sel] = perm[offsets[sel]]
+        return ids
+
+    def epoch_of(self, step: int) -> int:
+        return (step * self.batch_size) // self.n_samples
+
+    # -- shard-local IO ----------------------------------------------------
+    def _shard_indices(self, key: str):
+        """Unique shard index tuples this process must read for ``key``
+        (static across steps, so computed once)."""
+        cached = self._shard_plan.get(key)
+        if cached is not None:
+            return cached
+        sharding = self._shardings[key]
+        shape = self._global_shapes[key]
+        index_map = sharding.addressable_devices_indices_map(shape)
+        if self._device_filter is not None:
+            index_map = {
+                d: idx for d, idx in index_map.items() if self._device_filter(d)
+            }
+        seen = {}
+        for _, idx in index_map.items():
+            norm = tuple(
+                sl.indices(dim) for sl, dim in zip(idx, shape)
+            )
+            seen.setdefault(norm, tuple(slice(a, b, c) for a, b, c in norm))
+        self._shard_plan[key] = list(seen.values())
+        return self._shard_plan[key]
+
+    def _read_shard(self, key: str, ids: np.ndarray, index) -> np.ndarray:
+        """Read ONE device shard: only the chunks overlapping ``index``.
+
+        The batch dim indexes the shuffled schedule, so each sample row is a
+        separate (possibly non-contiguous) store read of the shard's spatial
+        slice — exactly the chunks under this device's pencil.
+        """
+        source = self.sources[key]
+        bsl, rest = index[0], tuple(index[1:])
+        rows = ids[bsl]
+        out = np.empty(
+            (len(rows),) + tuple(sl.stop - sl.start for sl in rest), np.float32
+        )
+        for j, sample in enumerate(rows):
+            out[j] = source.read_slice(
+                (slice(int(sample), int(sample) + 1),) + rest
+            )[0]
+        norm = self._norm.get(key)
+        if norm is not None:
+            mean, std = norm
+            csl = rest[0] if rest else slice(None)
+            out = (out - mean[:, csl]) / std[:, csl]
+        return np.ascontiguousarray(out, np.float32)
+
+    def _read_host_batch(self, step: int):
+        """Host-side blocks for every unique addressable shard (IO thread)."""
+        ids = self.sample_ids(step)
+        blocks = {}
+        for key in self.sources:
+            blocks[key] = {
+                tuple((s.start, s.stop) for s in index): self._read_shard(
+                    key, ids, index
+                )
+                for index in self._shard_indices(key)
+            }
+        return {"ids": ids, "blocks": blocks}
+
+    # -- public API --------------------------------------------------------
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        """Globally-sharded batch for ``step`` (deterministic, prefetched)."""
+        host = (
+            self._prefetcher.get(step)
+            if self._prefetcher is not None
+            else self._read_host_batch(step)
+        )
+
+        out = {}
+        ids = host["ids"]
+        for key in self.sources:
+            blocks = host["blocks"][key]
+
+            def fetch(index, _key=key, _blocks=blocks):
+                block = _blocks.get(tuple((s.start, s.stop) for s in index))
+                if block is None:
+                    # shard not prefetched (e.g. outside device_filter when
+                    # simulating one process of a multi-host job): read it
+                    # on demand through the same chunk-local path
+                    block = self._read_shard(_key, ids, index)
+                return block
+
+            out[key] = compat.make_global_array(
+                self._global_shapes[key], self._shardings[key], fetch
+            )
+        return out
+
+    def close(self):
+        if self._prefetcher is not None:
+            self._prefetcher.stop()
+            self._prefetcher = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

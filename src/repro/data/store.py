@@ -12,13 +12,20 @@ reproduces those two properties without external deps:
 
 Format: <root>/meta.json + <root>/c<idx0>_<idx1>_... (zstd-compressed raw).
 Writes are atomic (tmp + rename) so interrupted tasks can be retried safely
-— the idempotency the spot-VM story relies on.
+— the idempotency the spot-VM story relies on. ``meta.json`` may carry
+extra persisted keys (e.g. the datagen CLI's normalization ``stats``) via
+``update_meta``.
+
+IO accounting: every ``read_chunk`` bumps ``io_counters`` (chunk count,
+logical bytes, compressed bytes on disk), which is how the loader tests
+prove each shard touches only the chunks overlapping its slice.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
-from typing import Sequence, Tuple
+from typing import Iterator, Sequence, Tuple
 
 import numpy as np
 
@@ -43,12 +50,14 @@ except ImportError:  # pragma: no cover
 
 
 class ArrayStore:
-    def __init__(self, root: str, shape, dtype, chunks):
+    def __init__(self, root: str, shape, dtype, chunks, meta: dict | None = None):
         self.root = root
         self.shape = tuple(shape)
         self.dtype = np.dtype(dtype)
         self.chunks = tuple(chunks)
         assert len(self.chunks) == len(self.shape)
+        self.meta = dict(meta) if meta else {}
+        self.io_counters = {"chunks_read": 0, "bytes_read": 0, "bytes_on_disk": 0}
 
     # -- lifecycle ---------------------------------------------------------
     @classmethod
@@ -59,13 +68,28 @@ class ArrayStore:
         with open(tmp, "w") as f:
             json.dump(meta, f)
         os.rename(tmp, os.path.join(root, "meta.json"))
-        return cls(root, shape, dtype, chunks)
+        return cls(root, shape, dtype, chunks, meta)
 
     @classmethod
     def open(cls, root: str) -> "ArrayStore":
         with open(os.path.join(root, "meta.json")) as f:
             meta = json.load(f)
-        return cls(root, meta["shape"], meta["dtype"], meta["chunks"])
+        return cls(root, meta["shape"], meta["dtype"], meta["chunks"], meta)
+
+    def update_meta(self, **extra) -> None:
+        """Persist extra metadata keys (atomic rewrite of meta.json)."""
+        self.meta.update(extra)
+        merged = {
+            "shape": list(self.shape),
+            "dtype": self.dtype.str,
+            "chunks": list(self.chunks),
+            **{k: v for k, v in self.meta.items() if k not in ("shape", "dtype", "chunks")},
+        }
+        tmp = os.path.join(self.root, f"meta.json.tmp{os.getpid()}")
+        with open(tmp, "w") as f:
+            json.dump(merged, f)
+        os.rename(tmp, os.path.join(self.root, "meta.json"))
+        self.meta = merged
 
     # -- chunk io ----------------------------------------------------------
     def _chunk_path(self, idx: Sequence[int]) -> str:
@@ -74,11 +98,14 @@ class ArrayStore:
     def chunk_grid(self) -> Tuple[int, ...]:
         return tuple(-(-s // c) for s, c in zip(self.shape, self.chunks))
 
-    def write_chunk(self, idx: Sequence[int], data: np.ndarray):
-        expected = tuple(
+    def _chunk_shape(self, idx: Sequence[int]) -> Tuple[int, ...]:
+        return tuple(
             min(self.chunks[d], self.shape[d] - idx[d] * self.chunks[d])
             for d in range(len(idx))
         )
+
+    def write_chunk(self, idx: Sequence[int], data: np.ndarray):
+        expected = self._chunk_shape(idx)
         assert data.shape == expected, (data.shape, expected)
         path = self._chunk_path(idx)
         tmp = path + f".tmp{os.getpid()}"
@@ -87,22 +114,62 @@ class ArrayStore:
         os.rename(tmp, path)  # atomic publish -> retried tasks are safe
 
     def read_chunk(self, idx: Sequence[int]) -> np.ndarray:
-        shape = tuple(
-            min(self.chunks[d], self.shape[d] - idx[d] * self.chunks[d])
-            for d in range(len(idx))
-        )
-        with open(self._chunk_path(idx), "rb") as f:
-            raw = _decompress(f.read())
-        return np.frombuffer(raw, dtype=self.dtype).reshape(shape)
+        shape = self._chunk_shape(idx)
+        path = self._chunk_path(idx)
+        try:
+            with open(path, "rb") as f:
+                raw_disk = f.read()
+        except FileNotFoundError:
+            raise FileNotFoundError(
+                f"chunk {tuple(idx)} of store {self.root!r} is missing "
+                f"(expected file {path}); the sample was never written or "
+                f"its datagen task is still in flight"
+            ) from None
+        raw = _decompress(raw_disk)
+        out = np.frombuffer(raw, dtype=self.dtype).reshape(shape)
+        self.io_counters["chunks_read"] += 1
+        self.io_counters["bytes_read"] += out.nbytes
+        self.io_counters["bytes_on_disk"] += len(raw_disk)
+        return out
 
     def has_chunk(self, idx: Sequence[int]) -> bool:
         return os.path.exists(self._chunk_path(idx))
 
+    def reset_io_counters(self) -> None:
+        self.io_counters = {"chunks_read": 0, "bytes_read": 0, "bytes_on_disk": 0}
+
     # -- convenience: leading-dim samples + arbitrary slices ---------------
+    def sample_chunk_indices(self, i: int) -> Iterator[Tuple[int, ...]]:
+        """All chunk indices in leading-dim chunk row i (== sample i when
+        chunks[0] == 1, the one-sim-result-per-task layout)."""
+        grid = self.chunk_grid()
+        return (
+            (i,) + rest
+            for rest in itertools.product(*[range(g) for g in grid[1:]])
+        )
+
+    def sample_complete(self, i: int) -> bool:
+        """True iff every chunk of sample i has been published."""
+        return all(self.has_chunk(idx) for idx in self.sample_chunk_indices(i))
+
     def write_sample(self, i: int, data: np.ndarray):
-        """Write sample i when chunks[0] == 1 (one sim result per task)."""
+        """Write sample i when chunks[0] == 1 (one sim result per task).
+
+        The sample may span several spatial chunks (the store's chunking
+        along x/y is what lets each training shard read only its pencil);
+        each chunk file is published atomically, so a retried task simply
+        overwrites whatever subset its predecessor managed to write.
+        """
         assert self.chunks[0] == 1
-        self.write_chunk((i,) + (0,) * (len(self.shape) - 1), data[None] if data.ndim == len(self.shape) - 1 else data)
+        if data.ndim == len(self.shape) - 1:
+            data = data[None]
+        assert data.shape == (1,) + self.shape[1:], (data.shape, self.shape)
+        for idx in self.sample_chunk_indices(i):
+            sel = (slice(0, 1),) + tuple(
+                slice(idx[d] * self.chunks[d], idx[d] * self.chunks[d] + s)
+                for d, s in list(enumerate(self._chunk_shape(idx)))[1:]
+            )
+            self.write_chunk(idx, data[sel])
 
     def read_slice(self, slices: Sequence[slice]) -> np.ndarray:
         """Read an arbitrary rectangular slice (touches only needed chunks)."""
@@ -113,8 +180,6 @@ class ArrayStore:
         out = np.empty(out_shape, self.dtype)
         lo = [sl.start // c for sl, c in zip(slices, self.chunks)]
         hi = [(sl.stop - 1) // c for sl, c in zip(slices, self.chunks)]
-        import itertools
-
         for idx in itertools.product(*[range(a, b + 1) for a, b in zip(lo, hi)]):
             chunk = self.read_chunk(idx)
             src, dst = [], []
@@ -129,6 +194,5 @@ class ArrayStore:
 
     def n_complete(self) -> int:
         return sum(
-            1 for i in range(self.chunk_grid()[0])
-            if self.has_chunk((i,) + (0,) * (len(self.shape) - 1))
+            1 for i in range(self.chunk_grid()[0]) if self.sample_complete(i)
         )

@@ -1,0 +1,222 @@
+"""Cloud datagen CLI: BatchPool simulations -> chunked ArrayStore + stats.
+
+The paper's §V workflow, end to end: submit PDE simulations to the
+clusterless batch pool (process workers standing in for Azure Batch VMs),
+write every training pair into the chunked array store — spatially chunked
+along x and y so each training shard later reads only its pencil — and
+finish with a streaming (chunk-wise Welford) pass that persists per-channel
+normalization stats into the store's meta.json.
+
+Writes are resumable and idempotent: chunk publishes are atomic, a sample
+counts as done only when ALL its chunks exist, and a rerun simulates only
+the missing samples (task args are derived deterministically from the
+sample index, so a retry regenerates identical data).
+
+    PYTHONPATH=src python -m repro.launch.datagen \
+        --pde two_phase --n 8 --grid 16 8 8 --nt 4 --out /tmp/co2_ds
+    PYTHONPATH=src python src/repro/launch/train.py --mode fno \
+        --x-store /tmp/co2_ds/x --y-store /tmp/co2_ds/y \
+        --devices 8 --model-shards 2 2
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.cloud import BatchPool, LocalProcessBackend, ThreadBackend
+from repro.data.store import ArrayStore
+
+
+# -- streaming normalization stats ------------------------------------------
+
+def merge_welford(state, data: np.ndarray, axis) -> tuple:
+    """Merge a data block into a running (count, mean, M2) per-channel state
+    (Chan et al. parallel update) — one chunk in memory at a time."""
+    n_b = int(np.prod([data.shape[a] for a in axis])) or 1
+    mean_b = data.mean(axis=axis, dtype=np.float64)
+    m2_b = ((data.astype(np.float64) - np.expand_dims(mean_b, axis)) ** 2).sum(axis=axis)
+    if state is None:
+        return n_b, mean_b, m2_b
+    n_a, mean_a, m2_a = state
+    n = n_a + n_b
+    delta = mean_b - mean_a
+    mean = mean_a + delta * (n_b / n)
+    m2 = m2_a + m2_b + delta ** 2 * (n_a * n_b / n)
+    return n, mean, m2
+
+
+def compute_store_stats(store: ArrayStore) -> dict:
+    """Chunk-wise Welford over all complete samples -> per-channel stats.
+
+    Reads each chunk exactly once and never materializes more than one chunk
+    — the pass streams over blob storage just like training itself.
+    """
+    state = None
+    n_samples = 0
+    for i in range(store.chunk_grid()[0]):
+        if not store.sample_complete(i):
+            continue
+        n_samples += 1
+        for idx in store.sample_chunk_indices(i):
+            chunk = store.read_chunk(idx)
+            # layout [1, c, *spatial]: reduce everything but the channel dim
+            axis = (0,) + tuple(range(2, chunk.ndim))
+            state = merge_welford(state, chunk, axis)
+    if state is None:
+        raise RuntimeError(f"no complete samples in {store.root}")
+    count, mean, m2 = state
+    std = np.sqrt(np.maximum(m2 / max(count - 1, 1), 0.0))
+    return {
+        "mean": [float(v) for v in np.atleast_1d(mean)],
+        "std": [float(v) for v in np.atleast_1d(std)],
+        "count": int(count),
+        "n_samples": n_samples,
+    }
+
+
+# -- task arg derivation (deterministic in sample index -> idempotent) -------
+
+def two_phase_args(i: int, args) -> Tuple:
+    return (args.seed + i, args.wells, tuple(args.grid), args.nt)
+
+
+def navier_stokes_args(i: int, args) -> Tuple:
+    rng = np.random.default_rng(np.random.SeedSequence([args.seed, i]))
+    center = tuple(float(c) for c in rng.uniform(0.25, 0.75, size=3))
+    return (center, args.grid[0], args.nt)
+
+
+def to_training_pair(pde: str, result, nt: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(x, y) in the FNO layout [c, nx, ny, nz, nt] (paper: the binary input
+    map is repeated along t; the target is the full solution history)."""
+    mask, field = result
+    x = np.repeat(mask[None, :, :, :, None], nt, axis=-1).astype(np.float32)
+    return x, field[None].astype(np.float32)
+
+
+def open_or_create(root: str, shape, chunks, resume: bool) -> ArrayStore:
+    if resume and os.path.exists(os.path.join(root, "meta.json")):
+        store = ArrayStore.open(root)
+        if store.shape[1:] != tuple(shape[1:]) or store.chunks != tuple(chunks):
+            raise SystemExit(
+                f"--resume: existing store {root} has shape {store.shape} "
+                f"chunks {store.chunks}, requested {tuple(shape)} / {tuple(chunks)}"
+            )
+        if store.shape[0] < shape[0]:
+            # growing the dataset is just more independent chunk rows
+            store.shape = tuple(shape)
+            store.update_meta()
+        return store
+    return ArrayStore.create(root, shape, "f4", chunks)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--pde", choices=("two_phase", "navier_stokes"), default="two_phase")
+    ap.add_argument("--n", type=int, default=8, help="number of training samples")
+    ap.add_argument("--grid", type=int, nargs=3, default=(16, 8, 8),
+                    help="(nx, ny, nz); navier_stokes uses nx for all dims")
+    ap.add_argument("--nt", type=int, default=4)
+    ap.add_argument("--wells", type=int, default=2, help="two_phase: injectors/sample")
+    ap.add_argument("--out", required=True, help="dataset root; writes <out>/x, <out>/y")
+    ap.add_argument("--chunks-xy", type=int, nargs=2, default=(2, 2), metavar=("CX", "CY"),
+                    help="chunk counts along x/y (shard-aligned partial reads)")
+    ap.add_argument("--backend", choices=("process", "thread"), default="process")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--vm-type", default="E8s_v3")
+    ap.add_argument("--spot", action="store_true")
+    ap.add_argument("--speculative", action="store_true",
+                    help="re-execute stragglers (first finisher wins)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="skip samples whose chunks are already published")
+    ap.add_argument("--no-stats", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.pde == "two_phase":
+        from repro.data.pde.two_phase import simulate_task
+        nx, ny, nz = args.grid
+        task_args = two_phase_args
+    else:
+        from repro.data.pde.navier_stokes import simulate_task
+        nx = ny = nz = args.grid[0]
+        task_args = navier_stokes_args
+
+    sample = (1, nx, ny, nz, args.nt)  # [c, *spatial]
+    cx, cy = args.chunks_xy
+    if nx % cx or ny % cy:
+        raise SystemExit(f"grid ({nx},{ny}) not divisible by --chunks-xy ({cx},{cy})")
+    chunks = (1, 1, nx // cx, ny // cy, nz, args.nt)
+    shape = (args.n,) + sample
+    xs = open_or_create(os.path.join(args.out, "x"), shape, chunks, args.resume)
+    ys = open_or_create(os.path.join(args.out, "y"), shape, chunks, args.resume)
+
+    todo: List[int] = [
+        i for i in range(args.n)
+        if not (args.resume and xs.sample_complete(i) and ys.sample_complete(i))
+    ]
+    print(f"datagen: {args.n} samples requested, {args.n - len(todo)} already "
+          f"complete, simulating {len(todo)} ({args.pde})")
+
+    if todo:
+        backend = (
+            LocalProcessBackend(args.workers) if args.backend == "process"
+            else ThreadBackend(args.workers)
+        )
+        pool = BatchPool(
+            backend,
+            store_root=os.path.join(args.out, "blobs"),
+            vm_type=args.vm_type,
+            n_vms=args.workers,
+            spot=args.spot,
+        )
+        try:
+            if args.speculative:
+                # straggler re-execution needs the full future set in flight
+                results = pool.map(
+                    simulate_task,
+                    [task_args(i, args) for i in todo],
+                    speculative=True,
+                )
+                pairs = zip(todo, results)
+            else:
+                # write each sample as its task resolves: a preempted run
+                # keeps everything finished so far (--resume picks up the
+                # rest), and only one result is in memory at a time
+                futures = [
+                    pool.submit(simulate_task, task_args(i, args)) for i in todo
+                ]
+                pairs = ((i, f.result()) for i, f in zip(todo, futures))
+            for i, result in pairs:
+                x, y = to_training_pair(args.pde, result, args.nt)
+                xs.write_sample(i, x)
+                ys.write_sample(i, y)
+            rep = pool.cost_report()
+            print(
+                f"datagen: {rep['tasks']} tasks, mean {rep['mean_task_s']:.2f}s/task, "
+                f"${rep['usd']:.4f} on {rep['vm_type']}"
+                f"{' (spot)' if rep['spot'] else ''}, "
+                f"speculated {rep['speculated']}"
+            )
+        finally:
+            pool.shutdown()
+
+    done = min(xs.n_complete(), ys.n_complete())
+    print(f"datagen: {done}/{args.n} samples complete in {args.out}")
+    if not args.no_stats and done:
+        for name, store in (("x", xs), ("y", ys)):
+            stats = compute_store_stats(store)
+            store.update_meta(stats=stats)
+            print(
+                f"stats[{name}]: mean {['%.4g' % m for m in stats['mean']]} "
+                f"std {['%.4g' % s for s in stats['std']]} "
+                f"({stats['n_samples']} samples)"
+            )
+    return done
+
+
+if __name__ == "__main__":
+    main()

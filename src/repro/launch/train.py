@@ -5,6 +5,13 @@ Two modes:
         ArrayStore produced by the cloud datagen layer, or synthetic);
   lm  — train a reduced-config assigned architecture on synthetic tokens.
 
+The fno path is fully sharded end to end: batches come from the
+``ShardedDatasetLoader`` (each device reads only the store chunks under its
+``(mx, my)`` pencil and its slice of the batch dim, prefetched on a
+background thread) and the jitted step goes through ``shard_train_step``
+with explicit batch/param shardings on the data x model mesh — the same
+PartitionSpecs on both sides, so no resharding happens at the jit boundary.
+
 Fault tolerance is on by default: periodic sharded checkpoints, restart
 from the latest on crash (--inject-fault demonstrates it), straggler
 watchdog. ``--devices N`` spawns N host devices for a real data-parallel
@@ -25,20 +32,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
-from repro.core import FNOConfig, fno_forward, init_params, mse_loss
+from repro.core import (
+    FNOConfig, fno_forward, init_params, make_dist_forward, mse_loss,
+)
+from repro.core.fno import input_spec, param_specs
 from repro.models import init_lm_params, lm_loss
 from repro.models.policy import LOCAL
 from repro.train import AdamWConfig, init_opt_state, make_train_step, warmup_cosine
 from repro.train.fault import FaultInjector, run_supervised
-
-
-def fno_batch_iter(x_all, y_all, batch):
-    def it(step):
-        n = x_all.shape[0]
-        idx = [(step * batch + j) % n for j in range(batch)]
-        return {"x": x_all[np.asarray(idx)], "y": y_all[np.asarray(idx)]}
-
-    return it
+from repro.train.train_loop import shard_train_step
 
 
 def synthetic_fno_data(cfg: FNOConfig, n: int, seed: int = 0):
@@ -52,21 +54,34 @@ def synthetic_fno_data(cfg: FNOConfig, n: int, seed: int = 0):
     return np.asarray(x), np.asarray(y[:, : cfg.out_channels])
 
 
-def load_store_data(x_store_dir, y_store_dir):
-    from repro.data.store import ArrayStore
+def build_fno_mesh(n_devices: int, model_shards):
+    """(mesh, model_axis, n_model): data axis x 0/1/2 model axes."""
+    from repro.core.partition import make_mesh
+    from repro.launch.mesh import make_pencil_mesh
 
-    xs = ArrayStore.open(x_store_dir)
-    ys = ArrayStore.open(y_store_dir)
-    n = xs.n_complete()
-    x = np.stack([xs.read_chunk((i,) + (0,) * (len(xs.shape) - 1))[0] for i in range(n)])
-    y = np.stack([ys.read_chunk((i,) + (0,) * (len(ys.shape) - 1))[0] for i in range(n)])
-    if x.ndim == len(xs.shape) - 1 + 1:
-        x = x[:, None]  # add channel dim
-    if x.ndim == 5:
-        x = x[:, None]
-    if y.ndim == 5:
-        y = y[:, None]
-    return x.astype(np.float32), y.astype(np.float32)
+    model_shards = tuple(model_shards)
+    if len(model_shards) > 2:
+        raise SystemExit(
+            f"--model-shards takes 1 (x-decomposition) or 2 (x,y pencil) "
+            f"values, got {len(model_shards)}: {model_shards}"
+        )
+    n_model = 1
+    for s in model_shards:
+        n_model *= s
+    if n_devices % n_model:
+        raise SystemExit(
+            f"--devices {n_devices} not divisible by {n_model} model shards"
+        )
+    n_dp = n_devices // n_model
+    if n_model == 1:
+        return make_mesh((n_dp,), ("data",)), None, 1
+    if len(model_shards) == 1:
+        return (
+            make_mesh((n_dp, model_shards[0]), ("data", "model")),
+            "model",
+            n_model,
+        )
+    return make_pencil_mesh(n_dp, *model_shards), ("mx", "my"), n_model
 
 
 def main():
@@ -82,10 +97,16 @@ def main():
     ap.add_argument("--inject-fault", type=int, default=None, help="fail once at this step")
     ap.add_argument("--x-store", default=None)
     ap.add_argument("--y-store", default=None)
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="skip input normalization from the store's stats")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the loader's background prefetch thread")
+    ap.add_argument("--no-shuffle", action="store_true")
     ap.add_argument("--grid", type=int, nargs=4, default=(16, 16, 8, 8))
     ap.add_argument("--width", type=int, default=8)
     ap.add_argument("--n-data", type=int, default=16)
     ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
         "--model-shards", type=int, nargs="+", default=[1],
         help="fno mode: model-parallel shards. One value P shards the "
@@ -97,52 +118,46 @@ def main():
     opt_cfg = AdamWConfig(
         lr=warmup_cosine(args.lr, warmup=10, total=args.steps), weight_decay=0.0
     )
+    loader = None
 
     if args.mode == "fno":
+        from repro.data import ArrayStore, NdArraySource, ShardedDatasetLoader
+
+        if bool(args.x_store) != bool(args.y_store):
+            raise SystemExit("--x-store and --y-store must be given together")
         if args.x_store:
-            x_all, y_all = load_store_data(args.x_store, args.y_store)
-            grid = x_all.shape[-4:]
+            x_src = ArrayStore.open(args.x_store)
+            y_src = ArrayStore.open(args.y_store)
+            grid = tuple(x_src.shape[-4:])
+            in_ch, out_ch = x_src.shape[1], y_src.shape[1]
         else:
             grid = tuple(args.grid)
-            x_all = y_all = None
+            in_ch = out_ch = 1
+            x_src = y_src = None
         cfg = FNOConfig(
             grid=grid,
             modes=tuple(max(2, g // 4) for g in grid),
             width=args.width,
+            in_channels=in_ch,
+            out_channels=out_ch,
             n_blocks=4,
             decoder_dim=32,
         )
-        if x_all is None:
+        if x_src is None:
             x_all, y_all = synthetic_fno_data(cfg, args.n_data)
+            x_src, y_src = NdArraySource(x_all), NdArraySource(y_all)
 
-        model_shards = tuple(args.model_shards)
-        if len(model_shards) > 2:
+        mesh, model_axis, n_model = build_fno_mesh(args.devices, args.model_shards)
+        dp_axes = ("data",)
+        n_dp = mesh.shape["data"]
+        if args.batch % n_dp:
             raise SystemExit(
-                f"--model-shards takes 1 (x-decomposition) or 2 (x,y pencil) "
-                f"values, got {len(model_shards)}: {model_shards}"
+                f"--batch {args.batch} not divisible by the data-parallel "
+                f"size {n_dp} ({args.devices} devices / {n_model} model shards)"
             )
-        n_model = 1
-        for s in model_shards:
-            n_model *= s
         if n_model > 1:
-            from repro.core import make_dist_forward
-            from repro.launch.mesh import make_pencil_mesh
-            from repro.core.partition import make_mesh as _make_mesh
-
-            if args.devices % n_model:
-                raise SystemExit(
-                    f"--devices {args.devices} not divisible by "
-                    f"{n_model} model shards"
-                )
-            n_dp = args.devices // n_model
-            if len(model_shards) == 1:
-                mesh = _make_mesh((n_dp, model_shards[0]), ("data", "model"))
-                model_axis = "model"
-            else:
-                mesh = make_pencil_mesh(n_dp, *model_shards)
-                model_axis = ("mx", "my")
             dist_fwd = make_dist_forward(
-                mesh, cfg, dp_axes=("data",), model_axis=model_axis
+                mesh, cfg, dp_axes=dp_axes, model_axis=model_axis
             )
 
             def loss_fn(params, batch):
@@ -155,9 +170,28 @@ def main():
                 pred = fno_forward(params, batch["x"], cfg)
                 return mse_loss(pred, batch["y"]), {}
 
+        # one source of truth for the data layout: the loader assembles
+        # batches with exactly the specs the jitted step declares
+        batch_specs = {
+            "x": input_spec(dp_axes, model_axis),
+            "y": input_spec(dp_axes, model_axis),
+        }
+        p_specs = param_specs(mesh, model_axis)
         init_fn = functools.partial(init_params, cfg=cfg)
-        batches = fno_batch_iter(x_all, y_all, args.batch)
+        loader = ShardedDatasetLoader(
+            {"x": x_src, "y": y_src},
+            mesh,
+            args.batch,
+            batch_specs,
+            seed=args.seed,
+            shuffle=not args.no_shuffle,
+            normalize=() if args.no_normalize else ("x",),
+            prefetch=0 if args.no_prefetch else 2,
+        )
+        batches = loader.batch
     else:
+        from repro.core.partition import make_mesh
+
         cfg = reduced(get_arch(args.arch))
         rng = np.random.default_rng(0)
         tokens = rng.integers(0, cfg.vocab, size=(args.n_data, args.batch, 33), dtype=np.int32)
@@ -171,9 +205,22 @@ def main():
             return {"tokens": jnp.asarray(t[:, :-1]), "targets": jnp.asarray(t[:, 1:])}
 
         init_fn = functools.partial(init_lm_params, cfg=cfg)
+        if args.batch % args.devices:
+            raise SystemExit(
+                f"--batch {args.batch} not divisible by --devices {args.devices}"
+            )
+        mesh = make_mesh((args.devices,), ("data",))
+        from jax.sharding import PartitionSpec as P
+
+        abstract = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        p_specs = jax.tree.map(lambda _: P(), abstract)
+        batch_specs = {"tokens": P("data"), "targets": P("data")}
 
     step_fn = make_train_step(loss_fn, opt_cfg, grad_accum=args.grad_accum)
-    jit_step = jax.jit(step_fn)
+    abstract_params = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    jit_step = shard_train_step(
+        step_fn, mesh, p_specs, abstract_params, batch_specs, dp_axes=("data",)
+    )
 
     def init_state():
         params = init_fn(jax.random.PRNGKey(0))
@@ -184,21 +231,25 @@ def main():
         return {"params": params, "opt": opt}, metrics
 
     injector = FaultInjector([args.inject_fault]) if args.inject_fault is not None else None
-    result = run_supervised(
-        init_state=init_state,
-        train_step=train_step,
-        batch_iter=batches,
-        total_steps=args.steps,
-        ckpt_dir=args.ckpt_dir,
-        save_every=args.save_every,
-        injector=injector,
-        async_save=True,
-    )
+    try:
+        result = run_supervised(
+            init_state=init_state,
+            train_step=train_step,
+            batch_iter=batches,
+            total_steps=args.steps,
+            ckpt_dir=args.ckpt_dir,
+            save_every=args.save_every,
+            injector=injector,
+            async_save=True,
+        )
+    finally:
+        if loader is not None:
+            loader.close()
     first = result.metrics_log[0][1]["loss"] if result.metrics_log else float("nan")
     last = result.metrics_log[-1][1]["loss"] if result.metrics_log else float("nan")
     print(
         f"done: steps={result.final_step} failures={result.failures} "
-        f"restores={result.restores} loss {first:.4f} -> {last:.4f} "
+        f"restores={result.restores} loss {first:.3e} -> {last:.3e} "
         f"stragglers={len(result.straggler_steps)}"
     )
     return result

@@ -46,7 +46,9 @@ def make_train_step(
             (gsum, lsum), metrics = jax.lax.scan(body, (zero, jnp.zeros((), jnp.float32)), micro)
             grads = jax.tree.map(lambda g: g / grad_accum, gsum)
             loss = lsum / grad_accum
-            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            # scan stacks per-microbatch metrics along dim 0; report the
+            # average over the whole batch, not just the last microbatch
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
         new_params, new_opt, stats = adamw_update(grads, opt_state, params, opt_cfg)
         metrics = dict(metrics, loss=loss, **stats)
         return new_params, new_opt, metrics

@@ -60,6 +60,29 @@ def test_speculative_straggler():
         pool.shutdown()
 
 
+def test_speculative_reuses_uploaded_arg_refs():
+    """Backup tasks must reuse the first submission's BlobRefs (no re-upload)."""
+    with tempfile.TemporaryDirectory() as d:
+        pool = BatchPool(ThreadBackend(6), store_root=d, n_vms=6)
+        puts = []
+        orig_put = pool.store.put
+        pool.store.put = lambda obj: (puts.append(1), orig_put(obj))[1]
+        out = pool.map(
+            _slow_if_first,
+            [(i, 2.0 if i == 0 else 0.01) for i in range(6)],
+            speculative=True,
+            straggler_factor=3.0,
+        )
+        assert out == list(range(6))
+        rec = pool.records[0]
+        assert rec.speculated and rec.arg_refs is not None
+        # 2 args x 6 tasks uploaded once; result blobs are stored worker-side
+        # through a separate ObjectStore instance, so any extra put here
+        # would be a speculative re-upload
+        assert len(puts) == 12, len(puts)
+        pool.shutdown()
+
+
 def test_sim_submission_linear():
     """Paper Fig. 4a: submission time ~linear in tasks; ~16s @ 1024 tasks."""
     sim = SimBackend(SimConfig())

@@ -1,0 +1,294 @@
+"""Sharded data pipeline: loader properties, datagen round trip, store IO.
+
+Device-count-sensitive checks (the real (data, mx, my) mesh, chunk-read
+accounting per pencil) live in loader_checks.py, run as a subprocess with 8
+simulated devices; here we cover the device-count-agnostic properties and
+the datagen CLI round trip.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import ArrayStore, NdArraySource, ShardedDatasetLoader
+from repro.core.partition import make_mesh
+from jax.sharding import PartitionSpec as P
+
+SPEC6 = P(("data",), None, None, None, None, None)
+
+
+def _write_store(root, data, chunks):
+    st_ = ArrayStore.create(root, data.shape, "f4", chunks)
+    for i in range(data.shape[0]):
+        st_.write_sample(i, data[i])
+    return st_
+
+
+# ---------------------------------------------------------------------------
+# Loader properties (1-device mesh; the sharded mesh runs in loader_checks)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(3, 9),
+    batch=st.integers(1, 4),
+    cx=st.sampled_from([1, 2, 4]),
+    step=st.integers(0, 11),
+)
+def test_loader_matches_full_materialization(n, batch, cx, step):
+    """Property: any (n, batch, chunking, step) -> bit-identical batches."""
+    data = np.random.default_rng(n * 100 + batch).normal(
+        size=(n, 1, 4, 4, 2, 2)
+    ).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        store = _write_store(f"{d}/x", data, (1, 1, 4 // cx, 4, 2, 2))
+        mesh = make_mesh((1,), ("data",))
+        with ShardedDatasetLoader(
+            {"x": store}, mesh, batch, {"x": SPEC6}, seed=5, normalize=(),
+            prefetch=0,
+        ) as loader:
+            got = np.asarray(loader.batch(step)["x"])
+            ids = loader.sample_ids(step)
+            np.testing.assert_array_equal(got, data[ids])
+            # the shuffled schedule covers each sample once per epoch
+            assert len(ids) == batch
+            assert (ids >= 0).all() and (ids < n).all()
+
+
+def test_loader_prefetch_equals_sync_and_replay():
+    data = np.random.default_rng(3).normal(size=(6, 1, 4, 4, 2, 2)).astype(np.float32)
+    src = NdArraySource(data)
+    mesh = make_mesh((1,), ("data",))
+    sync = ShardedDatasetLoader({"x": src}, mesh, 2, {"x": SPEC6}, prefetch=0, normalize=())
+    pre = ShardedDatasetLoader({"x": src}, mesh, 2, {"x": SPEC6}, prefetch=2, normalize=())
+    try:
+        # sequential, then a replay jump backwards (checkpoint restore path)
+        for step in (0, 1, 2, 3, 1, 2, 9, 10):
+            np.testing.assert_array_equal(
+                np.asarray(pre.batch(step)["x"]), np.asarray(sync.batch(step)["x"])
+            )
+    finally:
+        sync.close()
+        pre.close()
+
+
+def test_loader_normalization_from_meta_stats():
+    data = np.random.default_rng(4).normal(
+        loc=3.0, scale=2.0, size=(5, 2, 4, 4, 2, 2)
+    ).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        store = _write_store(f"{d}/x", data, (1, 2, 4, 4, 2, 2))
+        mean = data.mean(axis=(0, 2, 3, 4, 5))
+        std = data.std(axis=(0, 2, 3, 4, 5), ddof=1)
+        store.update_meta(stats={"mean": mean.tolist(), "std": std.tolist()})
+        reopened = ArrayStore.open(f"{d}/x")  # stats survive reopen
+        assert reopened.meta["stats"]["mean"] == mean.tolist()
+        mesh = make_mesh((1,), ("data",))
+        with ShardedDatasetLoader(
+            {"x": reopened}, mesh, 5, {"x": SPEC6}, shuffle=False,
+            normalize=("x",), prefetch=0,
+        ) as loader:
+            got = np.asarray(loader.batch(0)["x"])
+        ref = (data - mean.reshape(1, -1, 1, 1, 1, 1)) / std.reshape(1, -1, 1, 1, 1, 1)
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+        assert abs(got.mean()) < 0.05 and abs(got.std() - 1.0) < 0.05
+
+
+def test_loader_prefetch_surfaces_missing_chunk_errors():
+    """A missing sample must raise (naming the chunk), never hang."""
+    data = np.ones((4, 1, 4, 4, 2, 2), np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", data.shape, "f4", (1, 1, 4, 4, 2, 2))
+        for i in (0, 1, 2):  # sample 3 never written
+            store.write_sample(i, data[i])
+        mesh = make_mesh((1,), ("data",))
+        with ShardedDatasetLoader(
+            {"x": store}, mesh, 4, {"x": SPEC6}, shuffle=False,
+            normalize=(), prefetch=2,
+        ) as loader:
+            with pytest.raises(FileNotFoundError, match="chunk"):
+                for step in range(3):
+                    loader.batch(step)
+
+
+def test_loader_rejects_mismatched_sources():
+    a = NdArraySource(np.zeros((4, 1, 4, 4, 2, 2), np.float32))
+    b = NdArraySource(np.zeros((5, 1, 4, 4, 2, 2), np.float32))
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="sample count"):
+        ShardedDatasetLoader(
+            {"x": a, "y": b}, mesh, 2, {"x": SPEC6, "y": SPEC6}, prefetch=0
+        )
+
+
+# ---------------------------------------------------------------------------
+# Store: multi-chunk samples, completeness, descriptive errors
+# ---------------------------------------------------------------------------
+
+def test_store_multichunk_sample_roundtrip_and_completeness():
+    data = np.arange(2 * 1 * 8 * 4, dtype=np.float32).reshape(2, 1, 8, 4)
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", data.shape, "f4", (1, 1, 4, 2))
+        store.write_sample(0, data[0])
+        assert store.sample_complete(0) and not store.sample_complete(1)
+        assert store.n_complete() == 1
+        np.testing.assert_array_equal(
+            store.read_slice((slice(0, 1),) + (slice(None),) * 3)[0], data[0]
+        )
+        # a partially-written sample is not complete
+        store.write_chunk((1, 0, 0, 0), data[1][None, :, :4, :2])
+        assert not store.sample_complete(1)
+        assert store.n_complete() == 1
+
+
+def test_store_missing_chunk_error_names_index():
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", (2, 4), "f4", (1, 4))
+        with pytest.raises(FileNotFoundError, match=r"chunk \(1, 0\)"):
+            store.read_chunk((1, 0))
+
+
+def test_store_io_counters():
+    data = np.ones((2, 8), np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", data.shape, "f4", (1, 4))
+        for i in range(2):
+            store.write_sample(i, data[i])
+        store.read_slice((slice(0, 1), slice(0, 8)))
+        assert store.io_counters["chunks_read"] == 2
+        assert store.io_counters["bytes_read"] == 32
+        store.reset_io_counters()
+        store.read_slice((slice(0, 2), slice(0, 3)))  # one chunk per row
+        assert store.io_counters["chunks_read"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Welford streaming stats
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 6), c=st.integers(1, 3))
+def test_streaming_stats_match_direct(n, c):
+    from repro.launch.datagen import compute_store_stats
+
+    data = np.random.default_rng(n + 10 * c).normal(
+        loc=1.5, scale=3.0, size=(n, c, 6, 4, 2, 2)
+    ).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        store = _write_store(f"{d}/x", data, (1, c, 3, 2, 2, 2))
+        stats = compute_store_stats(store)
+        np.testing.assert_allclose(
+            stats["mean"], data.mean(axis=(0, 2, 3, 4, 5), dtype=np.float64),
+            rtol=1e-5, atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            stats["std"], data.std(axis=(0, 2, 3, 4, 5), ddof=1), rtol=1e-4
+        )
+        assert stats["n_samples"] == n
+
+
+# ---------------------------------------------------------------------------
+# Datagen CLI round trip + the 8-device sharded mesh checks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(600)
+def test_datagen_store_loader_roundtrip():
+    """Tiny end-to-end: datagen CLI -> chunked store -> loader batches."""
+    from repro.launch.datagen import main as datagen_main
+
+    with tempfile.TemporaryDirectory() as d:
+        out = f"{d}/ds"
+        argv = [
+            "--pde", "two_phase", "--n", "4", "--grid", "8", "8", "4",
+            "--nt", "2", "--out", out, "--backend", "thread",
+            "--workers", "3", "--chunks-xy", "2", "2", "--resume",
+        ]
+        assert datagen_main(argv) == 4
+        # idempotent: rerun simulates nothing, stats unchanged
+        xs = ArrayStore.open(f"{out}/x")
+        stats_before = xs.meta["stats"]
+        assert datagen_main(argv) == 4
+        assert ArrayStore.open(f"{out}/x").meta["stats"] == stats_before
+
+        xs, ys = ArrayStore.open(f"{out}/x"), ArrayStore.open(f"{out}/y")
+        assert xs.shape == (4, 1, 8, 8, 4, 2) and ys.shape == xs.shape
+        assert xs.chunks == (1, 1, 4, 4, 4, 2)
+        mesh = make_mesh((1,), ("data",))
+        with ShardedDatasetLoader(
+            {"x": xs, "y": ys}, mesh, 2, {"x": SPEC6, "y": SPEC6},
+            normalize=("x",),
+        ) as loader:
+            for step in range(3):
+                b = loader.batch(step)
+                assert b["x"].shape == (2, 1, 8, 8, 4, 2)
+                assert np.isfinite(np.asarray(b["x"])).all()
+                assert np.isfinite(np.asarray(b["y"])).all()
+            # saturation target is untouched; mask input is normalized
+            assert float(np.asarray(b["y"]).max()) <= 1.0
+            assert abs(float(np.asarray(b["x"]).mean())) < 5.0
+
+
+@pytest.mark.timeout(1200)
+def test_sharded_loader_checks():
+    """Chunk accounting + bit-identity on a real (data, mx, my) mesh."""
+    script = os.path.join(os.path.dirname(__file__), "loader_checks.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, script],
+        capture_output=True,
+        text=True,
+        timeout=1200,
+        env=env,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "loader checks failed (see output)"
+    assert "ALL_LOADER_CHECKS_PASSED" in proc.stdout
+
+
+@pytest.mark.timeout(1200)
+def test_datagen_to_sharded_train_cli_smoke():
+    """The acceptance path: datagen CLI -> train CLI on 8 devices with a
+    2x2 pencil, loss decreasing, through shard_train_step."""
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    with tempfile.TemporaryDirectory() as d:
+        gen = subprocess.run(
+            [
+                sys.executable, "-m", "repro.launch.datagen",
+                "--pde", "two_phase", "--n", "8", "--grid", "8", "8", "4",
+                "--nt", "4", "--out", f"{d}/ds", "--backend", "thread",
+                "--workers", "4",
+            ],
+            capture_output=True, text=True, timeout=600, env=env, cwd=repo,
+        )
+        sys.stdout.write(gen.stdout)
+        assert gen.returncode == 0, gen.stderr[-4000:]
+        assert "8/8 samples complete" in gen.stdout
+
+        tr = subprocess.run(
+            [
+                sys.executable, os.path.join(repo, "src", "repro", "launch", "train.py"),
+                "--mode", "fno", "--x-store", f"{d}/ds/x", "--y-store", f"{d}/ds/y",
+                "--steps", "12", "--batch", "2", "--lr", "3e-3",
+                "--devices", "8", "--model-shards", "2", "2",
+                "--ckpt-dir", f"{d}/ckpt", "--save-every", "6",
+            ],
+            capture_output=True, text=True, timeout=900, env=env, cwd=repo,
+        )
+        sys.stdout.write(tr.stdout)
+        sys.stderr.write(tr.stderr[-4000:])
+        assert tr.returncode == 0
+        assert "done: steps=12" in tr.stdout
+        line = [l for l in tr.stdout.splitlines() if l.startswith("done:")][0]
+        first, last = (
+            float(tok) for tok in line.split("loss ")[1].split(" stragglers")[0].split(" -> ")
+        )
+        assert last < first, line

@@ -76,6 +76,21 @@ def test_grad_accum_equivalence():
     np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]), rtol=1e-4)
 
 
+def test_grad_accum_metrics_averaged():
+    """Aux metrics must average over microbatches, not keep the last one."""
+    def loss_fn(params, batch):
+        pred = batch["x"] * params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {"mean_x": jnp.mean(batch["x"])}
+
+    step = make_train_step(loss_fn, AdamWConfig(lr=0.0, grad_clip=None), grad_accum=2)
+    params = {"w": jnp.asarray(1.0)}
+    opt = init_opt_state(params)
+    # microbatch means are 1.0 and 3.0 -> averaged metric must be 2.0
+    batch = {"x": jnp.asarray([1.0, 1.0, 3.0, 3.0]), "y": jnp.zeros(4)}
+    _, _, metrics = jax.jit(step)(params, opt, batch)
+    np.testing.assert_allclose(float(metrics["mean_x"]), 2.0, rtol=1e-6)
+
+
 def test_warmup_cosine():
     sched = warmup_cosine(1.0, warmup=10, total=110)
     assert float(sched(0)) == 0.0
