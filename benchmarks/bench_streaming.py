@@ -1,0 +1,118 @@
+"""Online vs simulate-then-train: time-to-first-step and steps/s while
+generation is in flight.
+
+The paper's adoption cost is that the dataset "must be simulated in
+advance"; the streaming path (Meyer-et-al online learning) starts stepping
+as soon as the first batch's samples are published. Both arms run the SAME
+datagen (two_phase, thread backend) and the same loader/compute; the only
+difference is whether training waits for the dataset to finish. "compute"
+is a calibrated sleep standing in for the train step, as in bench_loader.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.partition import make_mesh
+from repro.data import ArrayStore, ShardedDatasetLoader, StreamingSchedule
+
+N, GRID, NT = 12, (8, 8, 4), 2
+BATCH, STEPS = 2, 12
+COMPUTE_S = 0.02
+SPEC6 = P(("data",), None, None, None, None, None)
+
+
+def _datagen(out: str) -> None:
+    from repro.launch.datagen import main as datagen_main
+
+    datagen_main([
+        "--pde", "two_phase", "--n", str(N),
+        "--grid", str(GRID[0]), str(GRID[1]), str(GRID[2]), "--nt", str(NT),
+        "--out", out, "--backend", "thread", "--workers", "2",
+        "--stats-every", "2", "--resume",
+    ])
+
+
+def _wait_store(path: str, timeout: float = 300.0) -> ArrayStore:
+    deadline = time.monotonic() + timeout
+    while True:
+        if os.path.exists(os.path.join(path, "meta.json")):
+            store = ArrayStore.open(path)
+            if "stats" in store.meta:
+                return store
+        if time.monotonic() > deadline:
+            raise TimeoutError(path)
+        time.sleep(0.02)
+
+
+def _step_loop(loader, first_batch_s: float, t0: float) -> dict:
+    for step in range(1, STEPS + 1):
+        np.asarray(loader.batch(step)["x"])
+        time.sleep(COMPUTE_S)  # the "train step"
+    wall = time.monotonic() - t0
+    return {
+        "t_first_step_s": round(first_batch_s, 4),
+        "steps_per_s": round(STEPS / max(wall - first_batch_s, 1e-9), 2),
+        "wall_s": round(wall, 4),
+    }
+
+
+def _run_offline(root: str) -> dict:
+    mesh = make_mesh((1,), ("data",))
+    t0 = time.monotonic()
+    _datagen(root)  # simulate-then-train: the whole dataset up front
+    xs, ys = ArrayStore.open(f"{root}/x"), ArrayStore.open(f"{root}/y")
+    with ShardedDatasetLoader(
+        {"x": xs, "y": ys}, mesh, BATCH, {"x": SPEC6, "y": SPEC6},
+        normalize=("x",),
+    ) as loader:
+        np.asarray(loader.batch(0)["x"])
+        first = time.monotonic() - t0
+        return _step_loop(loader, first, t0)
+
+
+def _run_online(root: str) -> dict:
+    mesh = make_mesh((1,), ("data",))
+    t0 = time.monotonic()
+    th = threading.Thread(target=_datagen, args=(root,), daemon=True)
+    th.start()
+    xs = _wait_store(f"{root}/x")
+    ys = _wait_store(f"{root}/y")
+    schedule = StreamingSchedule([xs, ys], BATCH, seed=0, poll_s=0.005)
+    with ShardedDatasetLoader(
+        {"x": xs, "y": ys}, mesh, BATCH, {"x": SPEC6, "y": SPEC6},
+        normalize=("x",), schedule=schedule,
+    ) as loader:
+        np.asarray(loader.batch(0)["x"])
+        first = time.monotonic() - t0
+        out = _step_loop(loader, first, t0)
+    th.join()
+    out.update(schedule.metrics())
+    return out
+
+
+def run():
+    with tempfile.TemporaryDirectory() as d:
+        online = _run_online(os.path.join(d, "online"))
+        offline = _run_offline(os.path.join(d, "offline"))
+    derived = {
+        "offline": offline,
+        "online": online,
+        "first_step_speedup": round(
+            offline["t_first_step_s"] / max(online["t_first_step_s"], 1e-9), 2
+        ),
+        "n_samples": N,
+    }
+    return online["t_first_step_s"] * 1e6, derived
+
+
+if __name__ == "__main__":
+    import json
+
+    us, derived = run()
+    print(f"streaming,{us:.2f},{json.dumps(derived, sort_keys=True)}")

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV lines (derived = compact JSON).
   cost_speedup    5-orders speedup + 3200x cost claims (§V)
   roofline        three-term roofline summary over dry-run artifacts
   loader          sharded-loader throughput, prefetch on/off overlap
+  streaming       online vs simulate-then-train time-to-first-step
 """
 from __future__ import annotations
 
@@ -18,7 +19,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_cloud, bench_comm, bench_cost, bench_loader, bench_scaling, bench_train
+    from benchmarks import (
+        bench_cloud, bench_comm, bench_cost, bench_loader, bench_scaling,
+        bench_streaming, bench_train,
+    )
     from benchmarks import roofline
 
     entries = [
@@ -29,6 +33,7 @@ def main() -> None:
         ("cost_speedup", bench_cost.run),
         ("roofline", roofline.run),
         ("loader", bench_loader.run),
+        ("streaming", bench_streaming.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failures = 0

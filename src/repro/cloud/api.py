@@ -27,7 +27,7 @@ import threading
 import time
 from typing import Any, Callable, List, Optional, Sequence
 
-from repro.cloud.backend import LocalProcessBackend
+from repro.cloud.backend import LocalProcessBackend, read_task_started
 from repro.cloud.objectstore import BlobRef, ObjectStore
 
 # On-demand $/hr (paper's price table [53], rounded); spot ~ 0.4x.
@@ -158,8 +158,16 @@ class BatchPool:
                 for i, f in enumerate(futures):
                     if i in results or i in speculated:
                         continue
-                    waited = time.time() - self.records[f.task_id].submitted_at
-                    if waited > factor * max(median, 1e-3):
+                    rec = self.records[f.task_id]
+                    if rec.started is None:
+                        rec.started = read_task_started(self.store_root, f.task_id)
+                    if rec.started is None:
+                        # still queued behind a full worker pool — a backup
+                        # submission would just join the same queue; only a
+                        # task that has actually STARTED can be a straggler
+                        continue
+                    running = time.time() - rec.started
+                    if running > factor * max(median, 1e-3):
                         # args were uploaded (or content-addressed) at first
                         # submission; reuse those refs instead of re-uploading
                         arg_refs = self.records[f.task_id].arg_refs
@@ -176,6 +184,7 @@ class BatchPool:
         rec = self.records.get(task_id)
         if rec is not None and rec.runtime_s is None:
             rec.runtime_s = payload["runtime_s"]
+            rec.started = payload.get("started_at", rec.started)
 
     def cost_report(self) -> dict:
         """$ cost model per the paper: core-hours x VM price (spot discount)."""

@@ -25,6 +25,31 @@ from repro.cloud.objectstore import BlobRef, ObjectStore
 
 # -- payload resolution (the "Redwood runtime" on each worker) ---------------
 
+def mark_task_started(store_root: str, task_id: int, t0: float) -> None:
+    """Publish the task's actual start time as a tiny marker object.
+
+    Backends queue tasks behind a finite worker pool, so submission time is
+    NOT start time; the pool's straggler speculation reads these markers to
+    avoid backup-submitting tasks that are merely queued (atomic rename, so
+    a half-written marker is never observed)."""
+    d = os.path.join(store_root, "starts")
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"task_{task_id}")
+    tmp = path + f".tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        f.write(repr(t0))
+    os.rename(tmp, path)
+
+
+def read_task_started(store_root: str, task_id: int) -> Optional[float]:
+    """Actual start time of a task, or None while it is still queued."""
+    try:
+        with open(os.path.join(store_root, "starts", f"task_{task_id}")) as f:
+            return float(f.read())
+    except (FileNotFoundError, ValueError):
+        return None
+
+
 def run_task(store_root: str, fn_ref: bytes, arg_refs: Sequence, task_id: int):
     """Worker-side entry: deserialize fn + args (BlobRefs fetched), run,
     store the result as a blob (Redwood replaces `return` with a blob
@@ -33,10 +58,17 @@ def run_task(store_root: str, fn_ref: bytes, arg_refs: Sequence, task_id: int):
     fn: Callable = pickle.loads(fn_ref)
     args = [a.fetch() if isinstance(a, BlobRef) else a for a in arg_refs]
     t0 = time.time()
+    mark_task_started(store_root, task_id, t0)
     result = fn(*args)
     runtime = time.time() - t0
     ref = store.put(result)
-    return {"task_id": task_id, "result_ref": ref, "runtime_s": runtime, "pid": os.getpid()}
+    return {
+        "task_id": task_id,
+        "result_ref": ref,
+        "runtime_s": runtime,
+        "started_at": t0,
+        "pid": os.getpid(),
+    }
 
 
 class LocalProcessBackend:

@@ -1,3 +1,5 @@
-from repro.data.loader import NdArraySource, ShardedDatasetLoader  # noqa: F401
+from repro.data.loader import (  # noqa: F401
+    NdArraySource, ShardedDatasetLoader, StreamingSchedule,
+)
 from repro.data.store import ArrayStore  # noqa: F401
 from repro.data.tokens import StoreTokens, SyntheticTokens  # noqa: F401

@@ -19,14 +19,21 @@ that contract on top of ``ArrayStore``:
     per-epoch ``PRNG(seed, epoch)`` permutations, so a restarted worker
     replays exactly the batch it crashed on (the fault supervisor's
     contract) and every process draws the same global order;
+  * streaming — with a ``StreamingSchedule``, batches draw from the
+    complete-prefix watermark of stores that datagen is STILL writing
+    (Meyer-et-al online training); the recorded per-step watermarks keep
+    batch t replayable after restore despite the race with the simulator;
   * normalization — per-channel (mean, std) from the store's ``meta.json``
     ``stats`` (written by the datagen CLI's streaming Welford pass) are
     applied on the host blocks, shard-locally.
 """
 from __future__ import annotations
 
+import json
+import os
 import queue
 import threading
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -166,6 +173,134 @@ class _Prefetcher:
         self._thread.join(timeout=5)
 
 
+class StreamingSchedule:
+    """Deterministic batch schedule over the currently-visible sample prefix.
+
+    Online training (Meyer et al.: stream samples into training as the
+    simulator produces them) needs a sample schedule that (a) only ever
+    draws samples whose chunks are fully published, (b) blocks — with a
+    stall counter surfaced in metrics — when training outpaces simulation,
+    and (c) stays a pure replayable function of ``step`` after a checkpoint
+    restore, which is the fault supervisor's contract.
+
+    (c) is the subtle one: visibility is a race against the simulator, so
+    the schedule RECORDS the complete-prefix watermark the first time each
+    step is drawn (``watermark_log``). Batch ids are then a pure function of
+    ``(seed, step, watermark_log[step])``; replaying the same log against
+    the finished store — or after a crash restore, against the same run —
+    reproduces every batch bit-identically. Pass ``log_path`` to persist the
+    log (append-only jsonl, one entry per newly recorded step) so a
+    restarted process replays too. Note the log fixes the sample SCHEDULE;
+    normalization stats are read once at loader construction, so a restarted
+    process must reuse the same stats snapshot (train.py --online persists
+    one next to this log) for the batch VALUES to match as well.
+    """
+
+    def __init__(
+        self,
+        stores: Sequence[object],
+        batch_size: int,
+        *,
+        seed: int = 0,
+        min_visible: Optional[int] = None,
+        timeout: Optional[float] = None,
+        poll_s: float = 0.02,
+        watermark_log: Optional[Dict[int, int]] = None,
+        log_path: Optional[str] = None,
+    ):
+        self.stores = list(stores)
+        assert self.stores, "StreamingSchedule needs at least one store"
+        self.batch_size = int(batch_size)
+        self.seed = seed
+        # back-pressure threshold: don't step until this many samples exist
+        # (clamped to the smallest store so a batch larger than the dataset
+        # oversamples the full prefix instead of waiting forever)
+        cap = min(int(s.shape[0]) for s in self.stores)
+        self.min_visible = max(
+            1, min(min_visible if min_visible else batch_size, cap)
+        )
+        self.timeout = timeout
+        self.poll_s = poll_s
+        self.watermark_log: Dict[int, int] = {
+            int(k): int(v) for k, v in (watermark_log or {}).items()
+        }
+        self.log_path = log_path
+        if log_path and os.path.exists(log_path):
+            with open(log_path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except ValueError:
+                        continue  # torn tail line from a crash mid-append
+                    self.watermark_log[int(rec["step"])] = int(rec["w"])
+        self.stalls = 0
+        self.stall_s = 0.0
+        self._lock = threading.Lock()
+
+    # -- visibility --------------------------------------------------------
+    def visible_now(self) -> int:
+        """Samples visible in EVERY store (min over complete prefixes)."""
+        return min(s.complete_watermark() for s in self.stores)
+
+    def _persist_entry(self, step: int, w: int) -> None:
+        """Append one record — O(1) per step, unlike rewriting the dict."""
+        if not self.log_path:
+            return
+        with open(self.log_path, "a") as f:
+            f.write(json.dumps({"step": step, "w": w}) + "\n")
+
+    def watermark(self, step: int) -> int:
+        """Visible-count watermark for ``step``: recorded once, replayed
+        forever after. Blocks (back-pressure) while fewer than
+        ``min_visible`` samples are published — WITHOUT holding the lock,
+        so replay lookups of already-recorded steps from other threads
+        (trainer vs prefetcher) never wait on the simulator."""
+        while True:
+            with self._lock:
+                w = self.watermark_log.get(step)
+                if w is not None:
+                    return w
+                w = self.visible_now()
+                if w >= self.min_visible:
+                    self.watermark_log[step] = w
+                    self._persist_entry(step, w)
+                    return w
+                self.stalls += 1
+            t0 = time.monotonic()
+            for s in self.stores:
+                s.wait_for_samples(
+                    self.min_visible, timeout=self.timeout, poll_s=self.poll_s
+                )
+            with self._lock:
+                self.stall_s += time.monotonic() - t0
+
+    # -- the schedule itself ----------------------------------------------
+    def sample_ids(self, step: int) -> np.ndarray:
+        """Batch ids for ``step``: uniform over the visible prefix, pure in
+        (seed, step, recorded watermark). Draws without replacement when the
+        prefix is large enough, with replacement while it is still smaller
+        than the batch (the price of starting before the data exists)."""
+        w = self.watermark(step)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, int(step), int(w)])
+        )
+        return rng.choice(w, size=self.batch_size, replace=w < self.batch_size)
+
+    def metrics(self) -> dict:
+        with self._lock:
+            return {
+                "stalls": self.stalls,
+                "stall_s": round(self.stall_s, 4),
+                "max_step_recorded": max(self.watermark_log, default=-1),
+                "last_watermark": self.watermark_log[
+                    max(self.watermark_log)
+                ] if self.watermark_log else 0,
+            }
+
+
 class ShardedDatasetLoader:
     """Assemble globally-sharded training batches from chunked stores.
 
@@ -188,6 +323,7 @@ class ShardedDatasetLoader:
         normalize: Sequence[str] = ("x",),
         prefetch: int = 2,
         device_filter=None,
+        schedule: Optional[StreamingSchedule] = None,
     ):
         assert set(sources) == set(specs), (sources.keys(), specs.keys())
         self.sources = dict(sources)
@@ -196,6 +332,7 @@ class ShardedDatasetLoader:
         self.specs = dict(specs)
         self.seed = seed
         self.shuffle = shuffle
+        self.schedule = schedule
         self._norm = {
             k: _norm_params(self.sources[k]) if k in tuple(normalize) else None
             for k in self.sources
@@ -225,7 +362,10 @@ class ShardedDatasetLoader:
 
     # -- deterministic sample schedule -------------------------------------
     def sample_ids(self, step: int) -> np.ndarray:
-        """Global sample ids of batch ``step`` (pure function of seed/step)."""
+        """Global sample ids of batch ``step`` (pure function of seed/step;
+        in streaming mode, delegated to the schedule's watermark log)."""
+        if self.schedule is not None:
+            return self.schedule.sample_ids(step)
         n, b = self.n_samples, self.batch_size
         positions = np.arange(step * b, (step + 1) * b)
         epochs, offsets = positions // n, positions % n

@@ -25,6 +25,7 @@ from __future__ import annotations
 import itertools
 import json
 import os
+import time
 from typing import Iterator, Sequence, Tuple
 
 import numpy as np
@@ -58,6 +59,7 @@ class ArrayStore:
         assert len(self.chunks) == len(self.shape)
         self.meta = dict(meta) if meta else {}
         self.io_counters = {"chunks_read": 0, "bytes_read": 0, "bytes_on_disk": 0}
+        self._watermark = 0  # complete-prefix length last observed (monotone)
 
     # -- lifecycle ---------------------------------------------------------
     @classmethod
@@ -172,10 +174,21 @@ class ArrayStore:
             self.write_chunk(idx, data[sel])
 
     def read_slice(self, slices: Sequence[slice]) -> np.ndarray:
-        """Read an arbitrary rectangular slice (touches only needed chunks)."""
+        """Read an arbitrary rectangular slice (touches only needed chunks).
+
+        Only unit-step slices are supported; the chunk-copy math below
+        assumes contiguous ranges, so a stepped slice would silently return
+        wrong data — reject it instead.
+        """
         slices = tuple(
             slice(*sl.indices(self.shape[d])) for d, sl in enumerate(slices)
         )
+        for d, sl in enumerate(slices):
+            if sl.step != 1:
+                raise ValueError(
+                    f"read_slice supports only unit-step slices; got step "
+                    f"{sl.step} in dim {d} of {self.root!r}"
+                )
         out_shape = tuple(sl.stop - sl.start for sl in slices)
         out = np.empty(out_shape, self.dtype)
         lo = [sl.start // c for sl, c in zip(slices, self.chunks)]
@@ -196,3 +209,41 @@ class ArrayStore:
         return sum(
             1 for i in range(self.chunk_grid()[0]) if self.sample_complete(i)
         )
+
+    # -- visibility (online/streaming training) ----------------------------
+    def complete_watermark(self) -> int:
+        """Length of the complete PREFIX of samples: the largest w such that
+        samples 0..w-1 are all published.
+
+        Incremental: chunk publishes are atomic and never retracted, so a
+        sample observed complete stays complete — each call resumes the scan
+        at the last known watermark instead of re-polling every chunk file
+        (O(new samples) per call, not O(n * chunks)). A streaming reader can
+        therefore poll this cheaply while datagen is still writing.
+        """
+        n = self.chunk_grid()[0]
+        w = self._watermark
+        while w < n and self.sample_complete(w):
+            w += 1
+        self._watermark = w
+        return w
+
+    def wait_for_samples(
+        self, k: int, timeout: float | None = None, poll_s: float = 0.02
+    ) -> int:
+        """Block until the complete prefix reaches ``k`` samples (or the full
+        store, if smaller); returns the watermark. Raises TimeoutError if
+        ``timeout`` seconds pass first — a stuck simulator should fail the
+        training job loudly, not hang it."""
+        target = min(int(k), self.chunk_grid()[0])
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            w = self.complete_watermark()
+            if w >= target:
+                return w
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"store {self.root!r}: waited {timeout}s for {target} "
+                    f"complete samples, have {w}"
+                )
+            time.sleep(poll_s)

@@ -4,8 +4,11 @@ The paper's §V workflow, end to end: submit PDE simulations to the
 clusterless batch pool (process workers standing in for Azure Batch VMs),
 write every training pair into the chunked array store — spatially chunked
 along x and y so each training shard later reads only its pencil — and
-finish with a streaming (chunk-wise Welford) pass that persists per-channel
-normalization stats into the store's meta.json.
+maintain a streaming Welford pass that merges each sample as it is written,
+persisting per-channel normalization stats into the store's meta.json every
+``--stats-every`` samples (so an online trainer can normalize long before
+the dataset is finished; ``run_datagen`` is the library entry train.py's
+``--online`` mode spawns in the background).
 
 Writes are resumable and idempotent: chunk publishes are atomic, a sample
 counts as done only when ALL its chunks exist, and a rerun simulates only
@@ -48,15 +51,20 @@ def merge_welford(state, data: np.ndarray, axis) -> tuple:
     return n, mean, m2
 
 
-def compute_store_stats(store: ArrayStore) -> dict:
-    """Chunk-wise Welford over all complete samples -> per-channel stats.
+def merge_sample_welford(state, sample: np.ndarray) -> tuple:
+    """Merge one full training sample ``[c, *spatial]`` into the running
+    state — the unit of the incremental (write-time) stats pass."""
+    block = sample[None]  # [1, c, *spatial]
+    return merge_welford(state, block, (0,) + tuple(range(2, block.ndim)))
 
-    Reads each chunk exactly once and never materializes more than one chunk
-    — the pass streams over blob storage just like training itself.
-    """
+
+def accumulate_store_state(store: ArrayStore, samples=None) -> tuple:
+    """(welford_state, n_samples) streamed chunk-wise over complete samples
+    (all of them, or the explicit ``samples`` index list)."""
     state = None
     n_samples = 0
-    for i in range(store.chunk_grid()[0]):
+    rows = range(store.chunk_grid()[0]) if samples is None else samples
+    for i in rows:
         if not store.sample_complete(i):
             continue
         n_samples += 1
@@ -65,8 +73,10 @@ def compute_store_stats(store: ArrayStore) -> dict:
             # layout [1, c, *spatial]: reduce everything but the channel dim
             axis = (0,) + tuple(range(2, chunk.ndim))
             state = merge_welford(state, chunk, axis)
-    if state is None:
-        raise RuntimeError(f"no complete samples in {store.root}")
+    return state, n_samples
+
+
+def stats_from_state(state, n_samples: int) -> dict:
     count, mean, m2 = state
     std = np.sqrt(np.maximum(m2 / max(count - 1, 1), 0.0))
     return {
@@ -75,6 +85,18 @@ def compute_store_stats(store: ArrayStore) -> dict:
         "count": int(count),
         "n_samples": n_samples,
     }
+
+
+def compute_store_stats(store: ArrayStore) -> dict:
+    """Chunk-wise Welford over all complete samples -> per-channel stats.
+
+    Reads each chunk exactly once and never materializes more than one chunk
+    — the pass streams over blob storage just like training itself.
+    """
+    state, n_samples = accumulate_store_state(store)
+    if state is None:
+        raise RuntimeError(f"no complete samples in {store.root}")
+    return stats_from_state(state, n_samples)
 
 
 # -- task arg derivation (deterministic in sample index -> idempotent) -------
@@ -110,10 +132,20 @@ def open_or_create(root: str, shape, chunks, resume: bool) -> ArrayStore:
             store.shape = tuple(shape)
             store.update_meta()
         return store
+    if os.path.isdir(root):
+        # ArrayStore.create would rewrite meta.json but leave old chunk
+        # files behind, which then count as complete samples with STALE
+        # data under the new meta — refuse rather than serve wrong samples.
+        stale = [f for f in os.listdir(root) if f.startswith("c")]
+        if stale:
+            raise SystemExit(
+                f"store {root} already holds {len(stale)} chunk file(s); "
+                f"pass --resume to reuse them or delete the directory first"
+            )
     return ArrayStore.create(root, shape, "f4", chunks)
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--pde", choices=("two_phase", "navier_stokes"), default="two_phase")
     ap.add_argument("--n", type=int, default=8, help="number of training samples")
@@ -134,8 +166,20 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true",
                     help="skip samples whose chunks are already published")
     ap.add_argument("--no-stats", action="store_true")
-    args = ap.parse_args(argv)
+    ap.add_argument("--stats-every", type=int, default=4,
+                    help="persist incremental Welford stats to meta.json "
+                    "every K completed samples (online training reads them "
+                    "before the dataset is finished)")
+    return ap
 
+
+def main(argv=None):
+    return run_datagen(build_parser().parse_args(argv))
+
+
+def run_datagen(args) -> int:
+    """Library-callable datagen body (``main`` minus argument parsing) —
+    the entry point train.py's ``--online`` mode runs in the background."""
     if args.pde == "two_phase":
         from repro.data.pde.two_phase import simulate_task
         nx, ny, nz = args.grid
@@ -154,12 +198,49 @@ def main(argv=None):
     xs = open_or_create(os.path.join(args.out, "x"), shape, chunks, args.resume)
     ys = open_or_create(os.path.join(args.out, "y"), shape, chunks, args.resume)
 
+    # run-identity guard: task args are a pure function of (sample index,
+    # pde, seed, ...), so --resume may only continue a run with the SAME
+    # signature — otherwise kept samples would silently mix distributions
+    gen_sig = {
+        "pde": args.pde, "seed": args.seed, "nt": args.nt,
+        "wells": args.wells if args.pde == "two_phase" else None,
+    }
+    for store in (xs, ys):
+        prev = store.meta.get("gen")
+        if prev is not None and prev != gen_sig:
+            raise SystemExit(
+                f"store {store.root} was generated with {prev}, this run "
+                f"asks for {gen_sig}; refusing to mix samples — use a "
+                f"fresh --out (or matching --pde/--seed/--nt/--wells)"
+            )
+        if prev is None:
+            store.update_meta(gen=gen_sig)
+
     todo: List[int] = [
         i for i in range(args.n)
         if not (args.resume and xs.sample_complete(i) and ys.sample_complete(i))
     ]
     print(f"datagen: {args.n} samples requested, {args.n - len(todo)} already "
           f"complete, simulating {len(todo)} ({args.pde})")
+
+    # incremental Welford: seed from samples already in the store (resume),
+    # then merge each new sample as it is written, persisting to meta.json
+    # every --stats-every samples so an ONLINE trainer sees normalization
+    # stats long before the dataset is finished.
+    track_stats = not args.no_stats
+    stats_every = max(1, getattr(args, "stats_every", 4))
+    state_x = state_y = None
+    n_stat = 0
+    if track_stats and todo and len(todo) < args.n:
+        done_already = sorted(set(range(args.n)) - set(todo))
+        state_x, n_stat = accumulate_store_state(xs, done_already)
+        state_y, _ = accumulate_store_state(ys, done_already)
+
+    def _persist_stats():
+        if state_x is not None:
+            xs.update_meta(stats=stats_from_state(state_x, n_stat))
+        if state_y is not None:
+            ys.update_meta(stats=stats_from_state(state_y, n_stat))
 
     if todo:
         backend = (
@@ -194,6 +275,12 @@ def main(argv=None):
                 x, y = to_training_pair(args.pde, result, args.nt)
                 xs.write_sample(i, x)
                 ys.write_sample(i, y)
+                if track_stats:
+                    state_x = merge_sample_welford(state_x, x)
+                    state_y = merge_sample_welford(state_y, y)
+                    n_stat += 1
+                    if n_stat % stats_every == 0:
+                        _persist_stats()
             rep = pool.cost_report()
             print(
                 f"datagen: {rep['tasks']} tasks, mean {rep['mean_task_s']:.2f}s/task, "
@@ -206,10 +293,16 @@ def main(argv=None):
 
     done = min(xs.n_complete(), ys.n_complete())
     print(f"datagen: {done}/{args.n} samples complete in {args.out}")
-    if not args.no_stats and done:
+    if track_stats and done:
+        if state_x is not None:
+            _persist_stats()
         for name, store in (("x", xs), ("y", ys)):
-            stats = compute_store_stats(store)
-            store.update_meta(stats=stats)
+            # a rerun with nothing to simulate keeps the persisted stats
+            # bit-identical; otherwise fall back to the full streaming pass
+            stats = store.meta.get("stats")
+            if stats is None:
+                stats = compute_store_stats(store)
+                store.update_meta(stats=stats)
             print(
                 f"stats[{name}]: mean {['%.4g' % m for m in stats['mean']]} "
                 f"std {['%.4g' % s for s in stats['std']]} "

@@ -20,12 +20,28 @@ mesh on CPU.
 import os
 import sys
 
-if "--devices" in sys.argv:  # must precede any jax import
-    n = sys.argv[sys.argv.index("--devices") + 1]
-    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+
+def sniff_devices(argv):
+    """Pre-argparse --devices value, handling BOTH ``--devices N`` and
+    ``--devices=N`` (the latter used to be silently ignored, running on one
+    device). Must be evaluated before any jax import."""
+    for i, tok in enumerate(argv):
+        if tok == "--devices" and i + 1 < len(argv):
+            return argv[i + 1]
+        if tok.startswith("--devices="):
+            return tok.split("=", 1)[1]
+    return None
+
+
+_n_devices = sniff_devices(sys.argv)
+if _n_devices is not None:  # must precede any jax import
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n_devices}"
 
 import argparse
 import functools
+import json
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +57,77 @@ from repro.models.policy import LOCAL
 from repro.train import AdamWConfig, init_opt_state, make_train_step, warmup_cosine
 from repro.train.fault import FaultInjector, run_supervised
 from repro.train.train_loop import shard_train_step
+
+
+def start_online_datagen(args):
+    """Spawn ``run_datagen`` in a background thread (the paper's 'simulate
+    in advance' cost removed: training overlaps it). Returns
+    ``(thread, err_holder)``; the holder carries any datagen exception so
+    the trainer fails loudly instead of stalling forever."""
+    from repro.launch.datagen import build_parser, run_datagen
+
+    if args.x_store:
+        root = os.path.dirname(os.path.abspath(args.x_store))
+        if (
+            os.path.dirname(os.path.abspath(args.y_store)) != root
+            or os.path.basename(os.path.abspath(args.x_store)) != "x"
+            or os.path.basename(os.path.abspath(args.y_store)) != "y"
+        ):
+            raise SystemExit(
+                "--online: stores must be <root>/x and <root>/y "
+                "(datagen's layout); or pass --out <root> instead"
+            )
+    elif args.out:
+        root = args.out
+        args.x_store = os.path.join(root, "x")
+        args.y_store = os.path.join(root, "y")
+    else:
+        raise SystemExit("--online needs --out (or --x-store/--y-store)")
+    nx, ny, nz, nt = args.grid
+    # same pre-parsed argv contract as the CLI (and the same --devices
+    # parsing caveat does not apply: datagen never touches jax/XLA flags)
+    dg_args = build_parser().parse_args([
+        "--pde", args.pde, "--n", str(args.n_data),
+        "--grid", str(nx), str(ny), str(nz), "--nt", str(nt),
+        "--out", root, "--backend", args.datagen_backend,
+        "--workers", str(args.datagen_workers),
+        "--chunks-xy", str(args.chunks_xy[0]), str(args.chunks_xy[1]),
+        "--stats-every", str(max(1, min(args.batch, 4))),
+        "--seed", str(args.seed), "--resume",
+    ])
+    err = []
+
+    def _run():
+        try:
+            run_datagen(dg_args)
+        except BaseException as e:  # noqa: BLE001 — surfaced by the waiters
+            err.append(e)
+
+    th = threading.Thread(target=_run, name="online-datagen", daemon=True)
+    th.start()
+    return th, err
+
+
+def _wait_online(path: str, err: list, timeout: float, need_stats: bool):
+    """Block until the store exists (and, if asked, carries normalization
+    stats from the incremental Welford pass); returns the opened store."""
+    from repro.data import ArrayStore
+
+    deadline = time.monotonic() + timeout
+    while True:
+        if os.path.exists(os.path.join(path, "meta.json")):
+            store = ArrayStore.open(path)
+            if not need_stats or "stats" in store.meta:
+                return store
+        if err:
+            raise RuntimeError("online datagen failed") from err[0]
+        if time.monotonic() > deadline:
+            raise TimeoutError(
+                f"--online: store {path} "
+                f"{'has no stats' if need_stats else 'never appeared'} "
+                f"after {timeout}s"
+            )
+        time.sleep(0.05)
 
 
 def synthetic_fno_data(cfg: FNOConfig, n: int, seed: int = 0):
@@ -97,6 +184,23 @@ def main():
     ap.add_argument("--inject-fault", type=int, default=None, help="fail once at this step")
     ap.add_argument("--x-store", default=None)
     ap.add_argument("--y-store", default=None)
+    ap.add_argument("--online", action="store_true",
+                    help="fno mode: spawn datagen in the background and "
+                    "start training from the store's visible sample prefix "
+                    "(Meyer-et-al streaming) instead of simulate-then-train")
+    ap.add_argument("--out", default=None,
+                    help="--online: dataset root (writes <out>/x, <out>/y); "
+                    "alternative to --x-store/--y-store")
+    ap.add_argument("--pde", choices=("two_phase", "navier_stokes"),
+                    default="two_phase", help="--online: PDE to simulate")
+    ap.add_argument("--datagen-workers", type=int, default=4)
+    ap.add_argument("--datagen-backend", choices=("process", "thread"),
+                    default="thread")
+    ap.add_argument("--chunks-xy", type=int, nargs=2, default=(2, 2),
+                    metavar=("CX", "CY"), help="--online: store chunking")
+    ap.add_argument("--online-timeout", type=float, default=600.0,
+                    help="--online: max seconds to wait for the simulator "
+                    "(first samples, stats, per-step back-pressure)")
     ap.add_argument("--no-normalize", action="store_true",
                     help="skip input normalization from the store's stats")
     ap.add_argument("--no-prefetch", action="store_true",
@@ -119,21 +223,39 @@ def main():
         lr=warmup_cosine(args.lr, warmup=10, total=args.steps), weight_decay=0.0
     )
     loader = None
+    schedule = None
+    dg_thread = dg_err = None
+    if args.online and args.mode != "fno":
+        raise SystemExit("--online is an fno-mode flag")
 
     if args.mode == "fno":
-        from repro.data import ArrayStore, NdArraySource, ShardedDatasetLoader
+        from repro.data import (
+            ArrayStore, NdArraySource, ShardedDatasetLoader, StreamingSchedule,
+        )
 
-        if bool(args.x_store) != bool(args.y_store):
-            raise SystemExit("--x-store and --y-store must be given together")
-        if args.x_store:
-            x_src = ArrayStore.open(args.x_store)
-            y_src = ArrayStore.open(args.y_store)
+        if args.online:
+            dg_thread, dg_err = start_online_datagen(args)
+            x_src = _wait_online(
+                args.x_store, dg_err, args.online_timeout,
+                need_stats=not args.no_normalize,
+            )
+            y_src = _wait_online(
+                args.y_store, dg_err, args.online_timeout, need_stats=False
+            )
+        else:
+            if bool(args.x_store) != bool(args.y_store):
+                raise SystemExit("--x-store and --y-store must be given together")
+            if args.x_store:
+                x_src = ArrayStore.open(args.x_store)
+                y_src = ArrayStore.open(args.y_store)
+            else:
+                x_src = y_src = None
+        if x_src is not None:
             grid = tuple(x_src.shape[-4:])
             in_ch, out_ch = x_src.shape[1], y_src.shape[1]
         else:
             grid = tuple(args.grid)
             in_ch = out_ch = 1
-            x_src = y_src = None
         cfg = FNOConfig(
             grid=grid,
             modes=tuple(max(2, g // 4) for g in grid),
@@ -178,6 +300,33 @@ def main():
         }
         p_specs = param_specs(mesh, model_axis)
         init_fn = functools.partial(init_params, cfg=cfg)
+        if args.online:
+            # draw each batch from the complete-prefix watermark while
+            # datagen is still writing; the per-step watermark log is
+            # persisted next to the checkpoints so a restarted process
+            # replays the exact same schedule (fault supervisor contract)
+            os.makedirs(args.ckpt_dir, exist_ok=True)
+            if not args.no_normalize:
+                # datagen keeps rewriting meta.json stats as samples land;
+                # snapshot the stats this run normalizes with so a restarted
+                # process replays numerically identical batches, not just
+                # the same sample ids
+                snap = os.path.join(args.ckpt_dir, "stats_snapshot.json")
+                if os.path.exists(snap):
+                    with open(snap) as f:
+                        x_src.meta["stats"] = json.load(f)
+                else:
+                    tmp = snap + f".tmp{os.getpid()}"
+                    with open(tmp, "w") as f:
+                        json.dump(x_src.meta["stats"], f)
+                    os.rename(tmp, snap)
+            schedule = StreamingSchedule(
+                [x_src, y_src],
+                args.batch,
+                seed=args.seed,
+                timeout=args.online_timeout,
+                log_path=os.path.join(args.ckpt_dir, "watermarks.json"),
+            )
         loader = ShardedDatasetLoader(
             {"x": x_src, "y": y_src},
             mesh,
@@ -187,6 +336,7 @@ def main():
             shuffle=not args.no_shuffle,
             normalize=() if args.no_normalize else ("x",),
             prefetch=0 if args.no_prefetch else 2,
+            schedule=schedule,
         )
         batches = loader.batch
     else:
@@ -226,7 +376,14 @@ def main():
         params = init_fn(jax.random.PRNGKey(0))
         return {"params": params, "opt": init_opt_state(params)}
 
+    online_info = {}
+
     def train_step(state, batch):
+        if schedule is not None and "first_n_complete" not in online_info:
+            # the moment the first step launches: how much of the dataset
+            # exists? < n proves simulation and training truly overlap
+            online_info["first_visible"] = schedule.visible_now()
+            online_info["first_n_complete"] = loader.sources["x"].n_complete()
         params, opt, metrics = jit_step(state["params"], state["opt"], batch)
         return {"params": params, "opt": opt}, metrics
 
@@ -245,6 +402,10 @@ def main():
     finally:
         if loader is not None:
             loader.close()
+    if dg_thread is not None:
+        dg_thread.join()  # let the simulator finish/flush before reporting
+        if dg_err:
+            raise RuntimeError("online datagen failed") from dg_err[0]
     first = result.metrics_log[0][1]["loss"] if result.metrics_log else float("nan")
     last = result.metrics_log[-1][1]["loss"] if result.metrics_log else float("nan")
     print(
@@ -252,6 +413,17 @@ def main():
         f"restores={result.restores} loss {first:.3e} -> {last:.3e} "
         f"stragglers={len(result.straggler_steps)}"
     )
+    if schedule is not None:
+        n_total = loader.sources["x"].shape[0]
+        sm = schedule.metrics()
+        overlapped = online_info.get("first_n_complete", n_total) < n_total
+        print(
+            f"online: first step with {online_info.get('first_n_complete', '?')}"
+            f"/{n_total} samples complete "
+            f"(visible={online_info.get('first_visible', '?')}) "
+            f"stalls={sm['stalls']} stall_s={sm['stall_s']} "
+            f"overlap={overlapped}"
+        )
     return result
 
 

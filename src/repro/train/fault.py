@@ -83,12 +83,19 @@ def run_supervised(
     watchdog = StragglerWatchdog()
     pending_save = None
 
+    def _truncate_log(to_step: int):
+        # a restore rewinds to ``to_step``; the rewound steps will be
+        # re-executed and re-appended, so drop their old entries or the log
+        # ends up with duplicate (step, metrics) pairs
+        metrics_log[:] = [e for e in metrics_log if e[0] < to_step]
+
     latest = ckpt_lib.latest_step(ckpt_dir)
     if latest is not None:
         abstract = jax.eval_shape(init_state)
         state, step, _ = ckpt_lib.restore(ckpt_dir, abstract, shardings=shardings)
         step += 1
         restores += 1
+        _truncate_log(step)
     else:
         state = init_state()
         step = 0
@@ -124,6 +131,7 @@ def run_supervised(
                 abstract = jax.eval_shape(init_state)
                 state, ck_step, _ = ckpt_lib.restore(ckpt_dir, abstract, shardings=shardings)
                 step = ck_step + 1
+            _truncate_log(step)
             restores += 1
 
     if pending_save is not None:

@@ -1,0 +1,377 @@
+"""Online/streaming training: store visibility, StreamingSchedule replay,
+fault-supervisor integration, and the satellite correctness fixes
+(metrics-log dedup after restore, stale-store refusal, stepped-slice
+rejection, straggler speculation only on started tasks).
+"""
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.partition import make_mesh
+from repro.data import ArrayStore, ShardedDatasetLoader, StreamingSchedule
+from jax.sharding import PartitionSpec as P
+
+SPEC6 = P(("data",), None, None, None, None, None)
+SHAPE = (8, 1, 4, 4, 2, 2)
+CHUNKS = (1, 1, 2, 4, 2, 2)
+
+
+def _sample(i: int) -> np.ndarray:
+    return np.random.default_rng(1000 + i).normal(size=SHAPE[1:]).astype(np.float32)
+
+
+def _writer(store: ArrayStore, order, delay_s: float = 0.0):
+    """Background 'simulator': publish samples one by one in ``order``."""
+    def run():
+        for i in order:
+            if delay_s:
+                time.sleep(delay_s)
+            store.write_sample(i, _sample(i))
+    th = threading.Thread(target=run, daemon=True)
+    th.start()
+    return th
+
+
+# ---------------------------------------------------------------------------
+# Store visibility API
+# ---------------------------------------------------------------------------
+
+def test_complete_watermark_is_prefix_length():
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", SHAPE, "f4", CHUNKS)
+        assert store.complete_watermark() == 0
+        # out-of-order publishes: watermark tracks the COMPLETE PREFIX
+        for i in (0, 1, 3):
+            store.write_sample(i, _sample(i))
+        assert store.complete_watermark() == 2
+        assert store.n_complete() == 3  # n_complete counts all, not prefix
+        store.write_sample(2, _sample(2))
+        assert store.complete_watermark() == 4
+        # a partially-written sample does not advance the watermark
+        store.write_chunk((4, 0, 0, 0, 0, 0), _sample(4)[None, :, :2, :4])
+        assert store.complete_watermark() == 4
+
+
+def test_wait_for_samples_blocks_and_times_out():
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", SHAPE, "f4", CHUNKS)
+        with pytest.raises(TimeoutError, match="waited"):
+            store.wait_for_samples(1, timeout=0.05, poll_s=0.01)
+        th = _writer(store, range(SHAPE[0]), delay_s=0.01)
+        assert store.wait_for_samples(2, timeout=30.0, poll_s=0.01) >= 2
+        th.join()
+        # k beyond the store clamps to the store size
+        assert store.wait_for_samples(10 ** 6, timeout=30.0) == SHAPE[0]
+
+
+def test_read_slice_rejects_stepped_slices():
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", (2, 8), "f4", (1, 4))
+        for i in range(2):
+            store.write_sample(i, np.ones(8, np.float32))
+        with pytest.raises(ValueError, match="unit-step"):
+            store.read_slice((slice(0, 2), slice(0, 8, 2)))
+        with pytest.raises(ValueError, match="unit-step"):
+            store.read_slice((slice(None, None, -1), slice(0, 8)))
+
+
+# ---------------------------------------------------------------------------
+# StreamingSchedule: visibility, back-pressure, bit-identical replay
+# ---------------------------------------------------------------------------
+
+def test_streaming_schedule_draws_only_visible_and_replays():
+    """The core online-training property: every batch is drawn from the
+    then-visible prefix, and the recorded watermark log replayed against the
+    FINISHED store reproduces the whole run bit-identically."""
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", SHAPE, "f4", CHUNKS)
+        th = _writer(store, range(SHAPE[0]), delay_s=0.03)
+        sched = StreamingSchedule([store], batch_size=2, seed=7, poll_s=0.005)
+        mesh = make_mesh((1,), ("data",))
+        online_ids, online_batches = [], []
+        with ShardedDatasetLoader(
+            {"x": store}, mesh, 2, {"x": SPEC6}, normalize=(), prefetch=2,
+            schedule=sched,
+        ) as loader:
+            for step in range(10):
+                online_batches.append(np.asarray(loader.batch(step)["x"]))
+                online_ids.append(sched.sample_ids(step))  # pure -> re-callable
+        th.join()
+        for step, ids in enumerate(online_ids):
+            w = sched.watermark_log[step]
+            assert (ids < w).all(), (step, ids, w)  # never an unpublished sample
+
+        # replay: same seed + watermark log, against the completed store
+        replay = StreamingSchedule(
+            [store], batch_size=2, seed=7, watermark_log=sched.watermark_log
+        )
+        with ShardedDatasetLoader(
+            {"x": store}, mesh, 2, {"x": SPEC6}, normalize=(), prefetch=0,
+            schedule=replay,
+        ) as loader2:
+            for step in range(10):
+                np.testing.assert_array_equal(replay.sample_ids(step), online_ids[step])
+                np.testing.assert_array_equal(
+                    np.asarray(loader2.batch(step)["x"]), online_batches[step]
+                )
+
+
+def test_streaming_schedule_backpressure_counts_stalls():
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", SHAPE, "f4", CHUNKS)
+        sched = StreamingSchedule(
+            [store], batch_size=2, seed=0, poll_s=0.005, timeout=30.0
+        )
+        th = _writer(store, range(3), delay_s=0.05)
+        ids = sched.sample_ids(0)  # must block until 2 samples exist
+        th.join()
+        assert sched.metrics()["stalls"] >= 1
+        assert sched.metrics()["stall_s"] > 0
+        assert (ids < sched.watermark_log[0]).all()
+
+
+def test_streaming_schedule_log_persistence_survives_restart():
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", SHAPE, "f4", CHUNKS)
+        for i in range(3):
+            store.write_sample(i, _sample(i))
+        log = os.path.join(d, "watermarks.json")
+        s1 = StreamingSchedule([store], batch_size=2, seed=3, log_path=log)
+        first = [s1.sample_ids(t) for t in range(4)]
+        # more samples land; a RESTARTED schedule must replay the old
+        # watermarks from disk, not observe the new visibility
+        for i in range(3, 8):
+            store.write_sample(i, _sample(i))
+        s2 = StreamingSchedule([store], batch_size=2, seed=3, log_path=log)
+        for t in range(4):
+            np.testing.assert_array_equal(s2.sample_ids(t), first[t])
+        s2.sample_ids(4)  # an unrecorded step observes the NEW visibility
+        assert s2.watermark_log[4] == 8 and s1.watermark_log[0] == 3
+
+
+def test_streaming_schedule_small_prefix_uses_replacement():
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", SHAPE, "f4", CHUNKS)
+        store.write_sample(0, _sample(0))
+        sched = StreamingSchedule([store], batch_size=4, seed=0, min_visible=1)
+        ids = sched.sample_ids(0)
+        assert len(ids) == 4 and (ids == 0).all()
+
+
+def test_streaming_schedule_batch_larger_than_dataset_terminates():
+    """min_visible clamps to the store size: a batch bigger than the whole
+    dataset oversamples the full prefix instead of spinning forever."""
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", (2,) + SHAPE[1:], "f4", CHUNKS)
+        for i in range(2):
+            store.write_sample(i, _sample(i))
+        sched = StreamingSchedule([store], batch_size=5, seed=0, timeout=30.0)
+        ids = sched.sample_ids(0)
+        assert len(ids) == 5 and set(ids) <= {0, 1}
+        assert sched.watermark_log[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# Fault supervisor: metrics dedup + kill-mid-generation restart
+# ---------------------------------------------------------------------------
+
+def test_restore_replay_does_not_duplicate_metrics():
+    import jax.numpy as jnp
+    from repro.train.fault import FaultInjector, run_supervised
+
+    def init_state():
+        return {"w": jnp.zeros(2)}
+
+    def train_step(state, batch):
+        w = state["w"] - 0.1 * (state["w"] - batch)
+        return {"w": w}, {"loss": jnp.sum((w - batch) ** 2)}
+
+    with tempfile.TemporaryDirectory() as d:
+        res = run_supervised(
+            init_state=init_state,
+            train_step=train_step,
+            batch_iter=lambda step: jnp.asarray([1.0, 2.0]),
+            total_steps=20,
+            ckpt_dir=d,
+            save_every=5,
+            injector=FaultInjector([7, 13]),
+        )
+    steps = [s for s, _ in res.metrics_log]
+    assert res.failures == 2 and res.restores == 2
+    assert len(steps) == len(set(steps)) == 20, "duplicate (step, metrics) entries"
+    assert steps == sorted(steps)
+
+
+@pytest.mark.timeout(300)
+def test_online_training_survives_kill_mid_generation():
+    """End to end through run_supervised: the simulator is still writing,
+    a fault kills training mid-run, and the restore replays the SAME sample
+    schedule (recorded watermarks) for the re-executed steps."""
+    import jax.numpy as jnp
+    from repro.train.fault import FaultInjector, run_supervised
+
+    with tempfile.TemporaryDirectory() as d:
+        store = ArrayStore.create(f"{d}/x", SHAPE, "f4", CHUNKS)
+        th = _writer(store, range(SHAPE[0]), delay_s=0.05)
+        sched = StreamingSchedule([store], batch_size=2, seed=11, poll_s=0.005)
+        mesh = make_mesh((1,), ("data",))
+        seen = {}
+
+        with ShardedDatasetLoader(
+            {"x": store}, mesh, 2, {"x": SPEC6}, normalize=(), prefetch=2,
+            schedule=sched,
+        ) as loader:
+
+            def batch_iter(step):
+                ids = sched.sample_ids(step)
+                if step in seen:  # replay after restore: bit-identical
+                    np.testing.assert_array_equal(ids, seen[step])
+                seen[step] = ids
+                return loader.batch(step)
+
+            def init_state():
+                return {"w": jnp.zeros(())}
+
+            def train_step(state, batch):
+                x = jnp.asarray(batch["x"])
+                w = state["w"] - 0.05 * (state["w"] - jnp.mean(x))
+                return {"w": w}, {"loss": (state["w"] - jnp.mean(x)) ** 2}
+
+            res = run_supervised(
+                init_state=init_state,
+                train_step=train_step,
+                batch_iter=batch_iter,
+                total_steps=12,
+                ckpt_dir=os.path.join(d, "ckpt"),
+                save_every=4,
+                injector=FaultInjector([6]),
+            )
+        th.join()
+    assert res.final_step == 12 and res.failures == 1 and res.restores == 1
+    steps = [s for s, _ in res.metrics_log]
+    assert len(steps) == len(set(steps)) == 12
+    assert all(np.isfinite(m["loss"]) for _, m in res.metrics_log)
+
+
+# ---------------------------------------------------------------------------
+# Datagen satellites: stale-store refusal, incremental stats
+# ---------------------------------------------------------------------------
+
+def test_open_or_create_refuses_stale_chunks():
+    from repro.launch.datagen import open_or_create
+
+    with tempfile.TemporaryDirectory() as d:
+        root = f"{d}/x"
+        store = ArrayStore.create(root, (2, 8), "f4", (1, 4))
+        store.write_sample(0, np.ones(8, np.float32))
+        with pytest.raises(SystemExit, match="chunk file"):
+            open_or_create(root, (2, 8), (1, 4), resume=False)
+        # --resume (same geometry) still opens it
+        assert open_or_create(root, (2, 8), (1, 4), resume=True).sample_complete(0)
+        # an empty/meta-only root is fine to (re)create
+        empty = f"{d}/y"
+        ArrayStore.create(empty, (2, 8), "f4", (1, 4))
+        open_or_create(empty, (2, 8), (1, 4), resume=False)
+
+
+def test_datagen_resume_refuses_mismatched_run_signature():
+    """--resume may only continue a run with the same (pde, seed, ...)
+    signature — otherwise stale samples from the old run would silently mix
+    with the new distribution (task args are pure in the sample index)."""
+    from repro.launch.datagen import main as datagen_main
+
+    with tempfile.TemporaryDirectory() as d:
+        argv = [
+            "--pde", "two_phase", "--n", "2", "--grid", "8", "8", "4",
+            "--nt", "2", "--out", f"{d}/ds", "--backend", "thread",
+            "--workers", "2", "--resume",
+        ]
+        assert datagen_main(argv + ["--seed", "0"]) == 2
+        with pytest.raises(SystemExit, match="refusing to mix"):
+            datagen_main(argv + ["--seed", "1"])
+        assert datagen_main(argv + ["--seed", "0"]) == 2  # same run: fine
+
+
+def test_datagen_incremental_stats_exist_before_finish():
+    """The online contract: stats are persisted every --stats-every samples,
+    so a trainer can normalize long before the dataset is complete; the
+    incremental result matches the full streaming pass."""
+    from repro.launch.datagen import main as datagen_main
+
+    with tempfile.TemporaryDirectory() as d:
+        out = f"{d}/ds"
+        datagen_main([
+            "--pde", "two_phase", "--n", "5", "--grid", "8", "8", "4",
+            "--nt", "2", "--out", out, "--backend", "thread",
+            "--workers", "2", "--stats-every", "2",
+        ])
+        from repro.launch.datagen import compute_store_stats
+
+        for name in ("x", "y"):
+            store = ArrayStore.open(f"{out}/{name}")
+            direct = compute_store_stats(store)
+            np.testing.assert_allclose(
+                store.meta["stats"]["mean"], direct["mean"], rtol=1e-6
+            )
+            np.testing.assert_allclose(
+                store.meta["stats"]["std"], direct["std"], rtol=1e-5
+            )
+            assert store.meta["stats"]["n_samples"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Cloud satellite: speculation only on tasks that actually STARTED
+# ---------------------------------------------------------------------------
+
+def _quick_task(s):
+    time.sleep(s)
+    return s
+
+
+@pytest.mark.timeout(120)
+def test_speculative_skips_queued_tasks():
+    """One worker, one slow task, many queued quick tasks: the quick tasks
+    wait a long time from SUBMISSION but run fast once started — the old
+    submitted_at-based straggler test would backup-submit all of them."""
+    from repro.cloud import BatchPool, ThreadBackend
+
+    with tempfile.TemporaryDirectory() as d:
+        pool = BatchPool(
+            ThreadBackend(1), store_root=f"{d}/blobs", n_vms=1
+        )
+        try:
+            # quick tasks queue ~0.8s behind the slow one — far beyond the
+            # straggler threshold (10 x 0.02s median) measured from SUBMIT,
+            # but well under it measured from their actual start
+            durations = [0.8] + [0.02] * 6
+            results = pool.map(
+                _quick_task, [(s,) for s in durations],
+                speculative=True, straggler_factor=10.0,
+            )
+        finally:
+            pool.shutdown()
+        assert results == durations
+        rep = pool.cost_report()
+        assert rep["speculated"] == 0, "queued tasks were treated as stragglers"
+        # the backend's actual start time is propagated on finish
+        assert all(r.started is not None for r in pool.records.values())
+        assert all(
+            r.started >= r.submitted_at - 1e-3 for r in pool.records.values()
+        )
+
+
+# ---------------------------------------------------------------------------
+# train.py satellite: --devices parsing handles both forms
+# ---------------------------------------------------------------------------
+
+def test_sniff_devices_both_forms():
+    from repro.launch.train import sniff_devices
+
+    assert sniff_devices(["train.py", "--devices", "8"]) == "8"
+    assert sniff_devices(["train.py", "--devices=8"]) == "8"
+    assert sniff_devices(["train.py", "--devices=16", "--steps", "2"]) == "16"
+    assert sniff_devices(["train.py", "--steps", "2"]) is None
