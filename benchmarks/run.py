@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV lines (derived = compact JSON).
   roofline        three-term roofline summary over dry-run artifacts
   loader          sharded-loader throughput, prefetch on/off overlap
   streaming       online vs simulate-then-train time-to-first-step
+  serve           continuous-batching FNO serving vs sequential + oracle
 """
 from __future__ import annotations
 
@@ -21,7 +22,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_cloud, bench_comm, bench_cost, bench_loader, bench_scaling,
-        bench_streaming, bench_train,
+        bench_serve, bench_streaming, bench_train,
     )
     from benchmarks import roofline
 
@@ -34,6 +35,7 @@ def main() -> None:
         ("roofline", roofline.run),
         ("loader", bench_loader.run),
         ("streaming", bench_streaming.run),
+        ("serve", bench_serve.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failures = 0

@@ -20,6 +20,7 @@ from repro.core.fno import (  # noqa: F401
     fno_forward,
     fno_forward_dist,
     fno_forward_dist_2d,
+    forward_and_specs,
     init_params,
     make_dist_forward,
     mse_loss,

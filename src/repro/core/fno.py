@@ -355,5 +355,35 @@ def make_dist_forward(
     )
 
 
+def forward_and_specs(
+    mesh: Mesh,
+    cfg: FNOConfig,
+    *,
+    dp_axes=("data",),
+    model_axis=None,
+    variant: str = "paper",
+):
+    """(forward, x_spec, p_specs) for a mesh: the single source of truth for
+    how an FNO batch and its params are laid out, shared by the training
+    driver and the serving runner (instead of each duplicating the
+    serial-vs-distributed branch and the spec plumbing).
+
+    ``model_axis=None`` returns the serial oracle (pure data parallelism:
+    params replicated, batch sharded over ``dp_axes``); a mesh-axis name or
+    a pair of names returns the shard_map'd distributed forward (paper
+    Alg. 2 / 2-D pencils). ``forward(params, x)`` in all cases.
+    """
+    x_spec = input_spec(dp_axes, model_axis)
+    p_specs = param_specs(mesh, model_axis)
+    if model_axis is None:
+        def forward(params, x):
+            return fno_forward(params, x, cfg)
+    else:
+        forward = make_dist_forward(
+            mesh, cfg, dp_axes=dp_axes, model_axis=model_axis, variant=variant
+        )
+    return forward, x_spec, p_specs
+
+
 def mse_loss(pred: jax.Array, target: jax.Array) -> jax.Array:
     return jnp.mean(jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32)))

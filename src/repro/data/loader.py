@@ -59,16 +59,74 @@ class NdArraySource:
         return self.array[tuple(slices)]
 
 
-def _norm_params(source, dtype=np.float32):
-    """(mean, std) arrays broadcastable over [b, c, ...] or None."""
-    stats = (getattr(source, "meta", None) or {}).get("stats")
-    if not stats:
-        return None
-    ndim = len(source.shape)
-    bshape = (1, -1) + (1,) * (ndim - 2)
-    mean = np.asarray(stats["mean"], dtype).reshape(bshape)
-    std = np.maximum(np.asarray(stats["std"], dtype).reshape(bshape), 1e-6)
-    return mean, std
+NORMALIZER_KINDS = ("meanstd", "absmax")
+
+
+class Normalizer:
+    """Invertible per-channel affine normalizer from persisted store stats.
+
+    The ``normalizer`` kind in a store's ``meta.json`` selects the scheme:
+    ``meanstd`` (default) encodes ``(x - mean) / std`` from the Welford
+    stats; ``absmax`` encodes ``x / absmax`` (the paper normalizes NS
+    targets by their max). ``decode`` inverts, which is what serving uses
+    to return predictions in physical units. Stats arrays are shaped to
+    broadcast over ``[b, c, *spatial]``.
+    """
+
+    def __init__(self, mean, scale, identity: bool = False):
+        self.mean = np.asarray(mean, np.float32)
+        self.scale = np.asarray(scale, np.float32)
+        self.identity = identity
+
+    @classmethod
+    def from_stats(cls, stats, kind: str = "meanstd", ndim: int = 6) -> "Normalizer":
+        if not stats:
+            return cls(0.0, 1.0, identity=True)
+        if kind not in NORMALIZER_KINDS:
+            raise ValueError(
+                f"unknown normalizer kind {kind!r}; expected one of "
+                f"{NORMALIZER_KINDS}"
+            )
+        bshape = (1, -1) + (1,) * (ndim - 2)
+        if kind == "absmax":
+            if "absmax" not in stats:
+                raise ValueError(
+                    "normalizer 'absmax' requested but the persisted stats "
+                    "carry no 'absmax' field (regenerate the store with the "
+                    "current datagen, which tracks per-channel max|x|)"
+                )
+            mean = np.zeros(len(stats["absmax"]), np.float32).reshape(bshape)
+            scale = np.maximum(
+                np.asarray(stats["absmax"], np.float32).reshape(bshape), 1e-6
+            )
+        else:
+            mean = np.asarray(stats["mean"], np.float32).reshape(bshape)
+            scale = np.maximum(
+                np.asarray(stats["std"], np.float32).reshape(bshape), 1e-6
+            )
+        return cls(mean, scale)
+
+    @classmethod
+    def from_source(cls, source) -> "Normalizer":
+        meta = getattr(source, "meta", None) or {}
+        return cls.from_stats(
+            meta.get("stats"),
+            meta.get("normalizer", "meanstd"),
+            len(source.shape),
+        )
+
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray((x - self.mean) / self.scale, np.float32)
+
+    def decode(self, y: np.ndarray) -> np.ndarray:
+        return np.asarray(y * self.scale + self.mean, np.float32)
+
+
+def _norm_params(source):
+    """(mean, scale) broadcastable over [b, c, ...] or None, honoring the
+    store's persisted ``normalizer`` kind."""
+    n = Normalizer.from_source(source)
+    return None if n.identity else (n.mean, n.scale)
 
 
 class _Prefetcher:

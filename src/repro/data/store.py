@@ -25,10 +25,17 @@ from __future__ import annotations
 import itertools
 import json
 import os
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Iterator, Sequence, Tuple
 
 import numpy as np
+
+# Multi-chunk read_slice fans file IO + decompression out over this many
+# threads (chunks are independent objects; blob-store reads are latency-
+# bound, so a small pool overlaps them well without oversubscribing CPU).
+READ_POOL_WORKERS = 8
 
 try:
     import zstandard as zstd
@@ -59,6 +66,8 @@ class ArrayStore:
         assert len(self.chunks) == len(self.shape)
         self.meta = dict(meta) if meta else {}
         self.io_counters = {"chunks_read": 0, "bytes_read": 0, "bytes_on_disk": 0}
+        self._io_lock = threading.Lock()  # keeps io_counters exact under the pool
+        self._pool: ThreadPoolExecutor | None = None
         self._watermark = 0  # complete-prefix length last observed (monotone)
 
     # -- lifecycle ---------------------------------------------------------
@@ -129,9 +138,10 @@ class ArrayStore:
             ) from None
         raw = _decompress(raw_disk)
         out = np.frombuffer(raw, dtype=self.dtype).reshape(shape)
-        self.io_counters["chunks_read"] += 1
-        self.io_counters["bytes_read"] += out.nbytes
-        self.io_counters["bytes_on_disk"] += len(raw_disk)
+        with self._io_lock:
+            self.io_counters["chunks_read"] += 1
+            self.io_counters["bytes_read"] += out.nbytes
+            self.io_counters["bytes_on_disk"] += len(raw_disk)
         return out
 
     def has_chunk(self, idx: Sequence[int]) -> bool:
@@ -193,7 +203,14 @@ class ArrayStore:
         out = np.empty(out_shape, self.dtype)
         lo = [sl.start // c for sl, c in zip(slices, self.chunks)]
         hi = [(sl.stop - 1) // c for sl, c in zip(slices, self.chunks)]
-        for idx in itertools.product(*[range(a, b + 1) for a, b in zip(lo, hi)]):
+        indices = list(
+            itertools.product(*[range(a, b + 1) for a, b in zip(lo, hi)])
+        )
+
+        def copy_one(idx):
+            # chunks are independent objects and each writes a DISJOINT
+            # rectangle of ``out``, so the copies can run concurrently;
+            # read_chunk keeps io_counters exact under its lock
             chunk = self.read_chunk(idx)
             src, dst = [], []
             for d in range(len(idx)):
@@ -203,7 +220,21 @@ class ArrayStore:
                 src.append(slice(s0 - c0, s1 - c0))
                 dst.append(slice(s0 - slices[d].start, s1 - slices[d].start))
             out[tuple(dst)] = chunk[tuple(src)]
+
+        if len(indices) == 1:
+            copy_one(indices[0])
+        else:
+            for f in [self._read_pool().submit(copy_one, i) for i in indices]:
+                f.result()  # re-raises missing-chunk errors with attribution
         return out
+
+    def _read_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=READ_POOL_WORKERS,
+                thread_name_prefix="arraystore-read",
+            )
+        return self._pool
 
     def n_complete(self) -> int:
         return sum(

@@ -36,19 +36,22 @@ from repro.data.store import ArrayStore
 # -- streaming normalization stats ------------------------------------------
 
 def merge_welford(state, data: np.ndarray, axis) -> tuple:
-    """Merge a data block into a running (count, mean, M2) per-channel state
-    (Chan et al. parallel update) — one chunk in memory at a time."""
+    """Merge a data block into a running (count, mean, M2, absmax)
+    per-channel state (Chan et al. parallel update, plus a running max|x|
+    for the paper's normalize-by-max scheme) — one chunk in memory at a
+    time."""
     n_b = int(np.prod([data.shape[a] for a in axis])) or 1
     mean_b = data.mean(axis=axis, dtype=np.float64)
     m2_b = ((data.astype(np.float64) - np.expand_dims(mean_b, axis)) ** 2).sum(axis=axis)
+    amax_b = np.abs(data).max(axis=axis).astype(np.float64)
     if state is None:
-        return n_b, mean_b, m2_b
-    n_a, mean_a, m2_a = state
+        return n_b, mean_b, m2_b, amax_b
+    n_a, mean_a, m2_a, amax_a = state
     n = n_a + n_b
     delta = mean_b - mean_a
     mean = mean_a + delta * (n_b / n)
     m2 = m2_a + m2_b + delta ** 2 * (n_a * n_b / n)
-    return n, mean, m2
+    return n, mean, m2, np.maximum(amax_a, amax_b)
 
 
 def merge_sample_welford(state, sample: np.ndarray) -> tuple:
@@ -77,11 +80,12 @@ def accumulate_store_state(store: ArrayStore, samples=None) -> tuple:
 
 
 def stats_from_state(state, n_samples: int) -> dict:
-    count, mean, m2 = state
+    count, mean, m2, amax = state
     std = np.sqrt(np.maximum(m2 / max(count - 1, 1), 0.0))
     return {
         "mean": [float(v) for v in np.atleast_1d(mean)],
         "std": [float(v) for v in np.atleast_1d(std)],
+        "absmax": [float(v) for v in np.atleast_1d(amax)],
         "count": int(count),
         "n_samples": n_samples,
     }
@@ -166,6 +170,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--resume", action="store_true",
                     help="skip samples whose chunks are already published")
     ap.add_argument("--no-stats", action="store_true")
+    ap.add_argument("--normalizer", choices=("meanstd", "absmax"),
+                    default="meanstd",
+                    help="normalization kind persisted in meta.json and "
+                    "honored by the loader and the serving runner "
+                    "(absmax = the paper's normalize-targets-by-max)")
     ap.add_argument("--stats-every", type=int, default=4,
                     help="persist incremental Welford stats to meta.json "
                     "every K completed samples (online training reads them "
@@ -215,6 +224,10 @@ def run_datagen(args) -> int:
             )
         if prev is None:
             store.update_meta(gen=gen_sig)
+        # the kind is presentation (how stats are APPLIED), not data: safe
+        # to (re)persist on every run, including --resume
+        if store.meta.get("normalizer") != args.normalizer:
+            store.update_meta(normalizer=args.normalizer)
 
     todo: List[int] = [
         i for i in range(args.n)

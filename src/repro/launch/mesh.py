@@ -26,6 +26,39 @@ def make_pencil_mesh(n_data: int, n_x: int, n_y: int):
     return compat.make_mesh((n_data, n_x, n_y), ("data", "mx", "my"))
 
 
+def build_fno_mesh(n_devices: int, model_shards):
+    """(mesh, model_axis, n_model) from a device count and --model-shards:
+    data axis x 0/1/2 model axes. One shard value P decomposes the solution
+    along x (paper Alg. 2, "model" axis); two values PX PY use the 2-D
+    pencil decomposition on ("mx", "my"). Shared by the training and
+    serving drivers so both sides agree on the mesh for a checkpoint."""
+    from repro.core.partition import make_mesh
+
+    model_shards = tuple(model_shards)
+    if len(model_shards) > 2:
+        raise ValueError(
+            f"model shards take 1 (x-decomposition) or 2 (x,y pencil) "
+            f"values, got {len(model_shards)}: {model_shards}"
+        )
+    n_model = 1
+    for s in model_shards:
+        n_model *= s
+    if n_devices % n_model:
+        raise ValueError(
+            f"{n_devices} devices not divisible by {n_model} model shards"
+        )
+    n_dp = n_devices // n_model
+    if n_model == 1:
+        return make_mesh((n_dp,), ("data",)), None, 1
+    if len(model_shards) == 1:
+        return (
+            make_mesh((n_dp, model_shards[0]), ("data", "model")),
+            "model",
+            n_model,
+        )
+    return make_pencil_mesh(n_dp, *model_shards), ("mx", "my"), n_model
+
+
 def dp_axes_for(mesh) -> tuple:
     """Data-parallel axes: every axis that is not a model axis."""
     return tuple(a for a in mesh.axis_names if a not in MODEL_AXIS_NAMES)

@@ -1,4 +1,4 @@
-"""Batched serving driver: continuous-batching engine on a reduced arch."""
+"""Batched LM serving driver: the shared slot scheduler on a reduced arch."""
 from __future__ import annotations
 
 import argparse
@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.models import init_lm_params
-from repro.serve import Engine, Request
+from repro.serve import Engine, Request, SERVABLE_FAMILIES
 
 
 def main():
@@ -22,6 +22,14 @@ def main():
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
+    if cfg.family not in SERVABLE_FAMILIES:
+        # fail here, with the fix, instead of deep inside runner setup
+        raise SystemExit(
+            f"--arch {args.arch} (family {cfg.family!r}) is not servable by "
+            f"the token engine; supported families: "
+            f"{', '.join(SERVABLE_FAMILIES)}. Encoder-decoder archs are "
+            f"served via the whisper_* entry points (examples/serve_lm.py)."
+        )
     params = init_lm_params(jax.random.PRNGKey(0), cfg)
     engine = Engine(cfg, params, max_len=args.max_len, max_batch=args.max_batch)
 
@@ -37,7 +45,7 @@ def main():
     print(
         f"{args.arch}: served {len(done)} requests, {total_tokens} tokens in "
         f"{dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. compile), "
-        f"{engine.steps} engine steps (continuous batching over "
+        f"{engine.steps} scheduler steps (continuous batching over "
         f"{args.max_batch} slots)"
     )
     for r in done[:3]:

@@ -20,22 +20,10 @@ mesh on CPU.
 import os
 import sys
 
+# must precede any jax import (repro.launch.devices never imports jax)
+from repro.launch.devices import apply_device_flag
 
-def sniff_devices(argv):
-    """Pre-argparse --devices value, handling BOTH ``--devices N`` and
-    ``--devices=N`` (the latter used to be silently ignored, running on one
-    device). Must be evaluated before any jax import."""
-    for i, tok in enumerate(argv):
-        if tok == "--devices" and i + 1 < len(argv):
-            return argv[i + 1]
-        if tok.startswith("--devices="):
-            return tok.split("=", 1)[1]
-    return None
-
-
-_n_devices = sniff_devices(sys.argv)
-if _n_devices is not None:  # must precede any jax import
-    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n_devices}"
+apply_device_flag(sys.argv)
 
 import argparse
 import functools
@@ -48,10 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
-from repro.core import (
-    FNOConfig, fno_forward, init_params, make_dist_forward, mse_loss,
-)
-from repro.core.fno import input_spec, param_specs
+from repro.core import FNOConfig, forward_and_specs, init_params, mse_loss
+from repro.launch.devices import sniff_devices  # noqa: F401  (re-export)
+from repro.launch.mesh import build_fno_mesh
 from repro.models import init_lm_params, lm_loss
 from repro.models.policy import LOCAL
 from repro.train import AdamWConfig, init_opt_state, make_train_step, warmup_cosine
@@ -141,34 +128,37 @@ def synthetic_fno_data(cfg: FNOConfig, n: int, seed: int = 0):
     return np.asarray(x), np.asarray(y[:, : cfg.out_channels])
 
 
-def build_fno_mesh(n_devices: int, model_shards):
-    """(mesh, model_axis, n_model): data axis x 0/1/2 model axes."""
-    from repro.core.partition import make_mesh
-    from repro.launch.mesh import make_pencil_mesh
+def write_fno_serving_config(ckpt_dir: str, cfg: FNOConfig, args, x_src, y_src,
+                             normalized) -> None:
+    """Persist the serving contract next to the checkpoints: architecture,
+    model-shard layout, and a snapshot of the normalization stats/kind the
+    run trained with — everything ``FNORunner.from_checkpoint`` needs to
+    serve the surrogate in physical units without the original stores."""
+    def stats_of(src):
+        return (getattr(src, "meta", None) or {}).get("stats")
 
-    model_shards = tuple(model_shards)
-    if len(model_shards) > 2:
-        raise SystemExit(
-            f"--model-shards takes 1 (x-decomposition) or 2 (x,y pencil) "
-            f"values, got {len(model_shards)}: {model_shards}"
-        )
-    n_model = 1
-    for s in model_shards:
-        n_model *= s
-    if n_devices % n_model:
-        raise SystemExit(
-            f"--devices {n_devices} not divisible by {n_model} model shards"
-        )
-    n_dp = n_devices // n_model
-    if n_model == 1:
-        return make_mesh((n_dp,), ("data",)), None, 1
-    if len(model_shards) == 1:
-        return (
-            make_mesh((n_dp, model_shards[0]), ("data", "model")),
-            "model",
-            n_model,
-        )
-    return make_pencil_mesh(n_dp, *model_shards), ("mx", "my"), n_model
+    def kind_of(src):
+        return (getattr(src, "meta", None) or {}).get("normalizer", "meanstd")
+
+    os.makedirs(ckpt_dir, exist_ok=True)
+    payload = {
+        "grid": list(cfg.grid),
+        "modes": list(cfg.modes),
+        "width": cfg.width,
+        "in_channels": cfg.in_channels,
+        "out_channels": cfg.out_channels,
+        "n_blocks": cfg.n_blocks,
+        "decoder_dim": cfg.decoder_dim,
+        "model_shards": list(args.model_shards),
+        "normalized": list(normalized),
+        "normalizer": kind_of(x_src),
+        "x_stats": stats_of(x_src),
+        "y_stats": stats_of(y_src),
+    }
+    tmp = os.path.join(ckpt_dir, f"fno_config.json.tmp{os.getpid()}")
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.rename(tmp, os.path.join(ckpt_dir, "fno_config.json"))
 
 
 def main():
@@ -269,36 +259,30 @@ def main():
             x_all, y_all = synthetic_fno_data(cfg, args.n_data)
             x_src, y_src = NdArraySource(x_all), NdArraySource(y_all)
 
-        mesh, model_axis, n_model = build_fno_mesh(args.devices, args.model_shards)
-        dp_axes = ("data",)
+        try:
+            mesh, model_axis, n_model = build_fno_mesh(
+                args.devices, args.model_shards
+            )
+        except ValueError as e:  # library error -> CLI-flag wording
+            raise SystemExit(f"--devices/--model-shards: {e}") from None
         n_dp = mesh.shape["data"]
         if args.batch % n_dp:
             raise SystemExit(
                 f"--batch {args.batch} not divisible by the data-parallel "
                 f"size {n_dp} ({args.devices} devices / {n_model} model shards)"
             )
-        if n_model > 1:
-            dist_fwd = make_dist_forward(
-                mesh, cfg, dp_axes=dp_axes, model_axis=model_axis
-            )
+        # one source of truth for the model/data layout, shared with the
+        # serving runner: the loader assembles batches with exactly the
+        # specs the jitted step declares
+        fwd, x_spec, p_specs = forward_and_specs(
+            mesh, cfg, dp_axes=("data",), model_axis=model_axis
+        )
 
-            def loss_fn(params, batch):
-                pred = dist_fwd(params, batch["x"])
-                return mse_loss(pred, batch["y"]), {}
+        def loss_fn(params, batch):
+            pred = fwd(params, batch["x"])
+            return mse_loss(pred, batch["y"]), {}
 
-        else:
-
-            def loss_fn(params, batch):
-                pred = fno_forward(params, batch["x"], cfg)
-                return mse_loss(pred, batch["y"]), {}
-
-        # one source of truth for the data layout: the loader assembles
-        # batches with exactly the specs the jitted step declares
-        batch_specs = {
-            "x": input_spec(dp_axes, model_axis),
-            "y": input_spec(dp_axes, model_axis),
-        }
-        p_specs = param_specs(mesh, model_axis)
+        batch_specs = {"x": x_spec, "y": x_spec}
         init_fn = functools.partial(init_params, cfg=cfg)
         if args.online:
             # draw each batch from the complete-prefix watermark while
@@ -327,6 +311,13 @@ def main():
                 timeout=args.online_timeout,
                 log_path=os.path.join(args.ckpt_dir, "watermarks.json"),
             )
+        # persist the serving contract (arch + normalization snapshot —
+        # AFTER the online path pinned its stats snapshot) so serve_pde.py /
+        # FNORunner.from_checkpoint can load this run without the stores
+        write_fno_serving_config(
+            args.ckpt_dir, cfg, args, x_src, y_src,
+            normalized=() if args.no_normalize else ("x",),
+        )
         loader = ShardedDatasetLoader(
             {"x": x_src, "y": y_src},
             mesh,

@@ -1,1 +1,13 @@
-from repro.serve.engine import Engine, Request  # noqa: F401
+"""Family-generic serving: one slot scheduler, per-family model runners.
+
+``Scheduler`` owns slots/admission/retirement; ``TransformerRunner`` (token
+decode) and ``FNORunner`` (PDE-scenario surrogate inference) plug into it.
+``Engine`` is the LLM-facing thin client kept for API compatibility.
+"""
+from repro.serve.engine import (  # noqa: F401
+    Engine, Request, SERVABLE_FAMILIES, TransformerRunner,
+)
+from repro.serve.fno_runner import (  # noqa: F401
+    FNORunner, ScenarioRequest, default_feedback,
+)
+from repro.serve.scheduler import ModelRunner, Scheduler  # noqa: F401

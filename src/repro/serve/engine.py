@@ -1,25 +1,31 @@
-"""Continuous-batching-lite serving engine.
+"""Token-family ModelRunner + the LLM serving engine.
 
-Slot-based scheduler over the family-generic decode step: a fixed pool of
-``max_batch`` slots, each holding one request's cache; new requests are
-admitted into free slots as soon as they open (no full-batch barrier —
-"continuous batching" a la Orca/vLLM, minus paging since our caches are
-dense per-slot). Per-slot sequence positions differ, so the decode step is
-vmapped over the slot dim with a per-slot index vector.
+The slot-pool/admission/retirement logic lives in ``serve.scheduler``;
+this module contributes the token-decoding half of the split: a
+``TransformerRunner`` that prefillls a request's cache on admission and
+advances every active slot by one greedy decode step per scheduler tick.
+Per-slot sequence positions differ, so the decode step is vmapped over the
+slot dim with a per-slot index vector. Greedy sampling; EOS or max_tokens
+retires a slot.
 
-Greedy sampling; EOS or max_tokens retires a slot.
+``Engine`` is a thin client of the shared scheduler kept for API
+compatibility (submit / step / run_until_done).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as tf_lib
-from repro.models import whisper as wh_lib
 from repro.models.policy import LOCAL, ParallelPolicy
+from repro.serve.scheduler import Scheduler
+
+# Families Engine can decode with lm_prefill/lm_decode_step. "encdec"
+# (whisper) has a separate encoder pass and its own entry points.
+SERVABLE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
 
 
 @dataclasses.dataclass
@@ -32,32 +38,32 @@ class Request:
     done: bool = False
 
 
-@dataclasses.dataclass
-class _Slot:
-    request: Optional[Request] = None
-    length: int = 0
+class TransformerRunner:
+    """ModelRunner for decoder-family LMs: batched greedy decode over slots."""
 
-
-class Engine:
     def __init__(
         self,
         cfg,
         params,
         *,
         max_len: int = 128,
-        max_batch: int = 4,
+        max_slots: int = 4,
         policy: ParallelPolicy = LOCAL,
     ):
-        if cfg.family == "encdec":
-            raise NotImplementedError("use whisper_* serving entry points")
+        if cfg.family not in SERVABLE_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family!r} is not servable by the token engine "
+                f"(supported: {', '.join(SERVABLE_FAMILIES)}); encoder-"
+                f"decoder models go through the whisper_* entry points"
+            )
         self.cfg = cfg
         self.params = params
         self.policy = policy
         self.max_len = max_len
-        self.slots: List[_Slot] = [_Slot() for _ in range(max_batch)]
+        self._lengths = [0] * max_slots
         # Cache with batch dim = slots (axis differs per subtree: stacked
         # layer leaves carry it at axis 1).
-        self.cache = tf_lib.init_cache(cfg, max_batch, max_len, policy=policy)
+        self.cache = tf_lib.init_cache(cfg, max_slots, max_len, policy=policy)
         self._axes = tf_lib.cache_batch_axes(self.cache)
 
         axes = self._axes
@@ -78,68 +84,93 @@ class Engine:
         self._prefill = jax.jit(
             lambda p, t: tf_lib.lm_prefill(p, t, cfg, policy, max_len=max_len)
         )
-        self.queue: List[Request] = []
-        self.finished: List[Request] = []
-        self.steps = 0
 
-    # -- API ----------------------------------------------------------------
-    def submit(self, req: Request):
-        self.queue.append(req)
+    # -- ModelRunner protocol ------------------------------------------------
+    def admit(self, slot: int, req: Request) -> None:
+        """Prefill the prompt and install the cache into ``slot``."""
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache = self._prefill(self.params, tokens)
+        nxt = int(jnp.argmax(logits[0]))
+        req.output.append(nxt)
 
-    def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot.request is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache = self._prefill(self.params, tokens)
-            nxt = int(jnp.argmax(logits[0]))
-            req.output.append(nxt)
-            # install the request's cache into slot i along each leaf's
-            # batch axis (the prefill cache has batch 1 there)
-            def install(full, new, ax):
-                idx = [slice(None)] * full.ndim
-                idx[ax] = i
-                return full.at[tuple(idx)].set(jnp.take(new, 0, axis=ax).astype(full.dtype))
+        # install the request's cache into the slot along each leaf's
+        # batch axis (the prefill cache has batch 1 there)
+        def install(full, new, ax):
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slot
+            return full.at[tuple(idx)].set(jnp.take(new, 0, axis=ax).astype(full.dtype))
 
-            self.cache = jax.tree.map(install, self.cache, cache, self._axes)
-            slot.request = req
-            slot.length = len(req.prompt) + 1
+        self.cache = jax.tree.map(install, self.cache, cache, self._axes)
+        self._lengths[slot] = len(req.prompt) + 1
 
-    def step(self) -> int:
-        """One engine tick: admit, batched decode, retire. Returns #active."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s.request is not None]
-        if not active:
-            return 0
+    def step(self, slots: Sequence[Optional[Request]], active: Sequence[int]) -> list:
         tokens = jnp.asarray(
-            [[s.request.output[-1] if s.request else 0] for s in self.slots],
-            jnp.int32,
+            [[r.output[-1] if r else 0] for r in slots], jnp.int32
         )  # [slot, 1]
         index = jnp.asarray(
-            [s.length - 1 if s.request else 0 for s in self.slots], jnp.int32
+            [self._lengths[i] - 1 if slots[i] else 0 for i in range(len(slots))],
+            jnp.int32,
         )
-        logits, new_cache = self._step(self.params, tokens[:, None, :], self.cache, index)
-        self.cache = new_cache
-        self.steps += 1
+        logits, self.cache = self._step(self.params, tokens[:, None, :], self.cache, index)
         nxt = jnp.argmax(logits, axis=-1)  # [slot]
+        finished = []
         for i in active:
-            slot = self.slots[i]
-            req = slot.request
+            req = slots[i]
             tok = int(nxt[i])
             req.output.append(tok)
-            slot.length += 1
+            self._lengths[i] += 1
             if (
                 (req.eos_id is not None and tok == req.eos_id)
                 or len(req.output) >= req.max_tokens
-                or slot.length >= self.max_len
+                or self._lengths[i] >= self.max_len
             ):
-                req.done = True
-                self.finished.append(req)
-                self.slots[i] = _Slot()
-        return len(active)
+                finished.append(i)
+        return finished
 
-    def run_until_done(self, max_steps: int = 1000):
-        while (self.queue or any(s.request for s in self.slots)) and self.steps < max_steps:
-            self.step()
-        return self.finished
+    def retire(self, slot: int, req: Request) -> None:
+        self._lengths[slot] = 0  # cache rows are overwritten on next admit
+
+
+class Engine:
+    """LLM serving engine: TransformerRunner behind the shared scheduler."""
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        max_len: int = 128,
+        max_batch: int = 4,
+        policy: ParallelPolicy = LOCAL,
+    ):
+        self.cfg = cfg
+        self.runner = TransformerRunner(
+            cfg, params, max_len=max_len, max_slots=max_batch, policy=policy
+        )
+        self.scheduler = Scheduler(self.runner, max_batch)
+
+    # -- API (delegates to the scheduler) ------------------------------------
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    def step(self) -> int:
+        return self.scheduler.step()
+
+    def run_until_done(self, max_steps: int = 1000) -> List[Request]:
+        return self.scheduler.run_until_done(max_steps)
+
+    @property
+    def steps(self) -> int:
+        return self.scheduler.steps
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.scheduler.finished
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def slots(self):
+        return self.scheduler.slots

@@ -1,0 +1,301 @@
+"""PDE-scenario ModelRunner: model-parallel FNO surrogate inference.
+
+The paper's headline result is inference — the trained surrogate simulates
+3-D CO2 flow ~5 orders of magnitude faster than the numerical simulator,
+which is what makes 1000s-of-scenarios workloads (well-placement
+optimization, uncertainty quantification) tractable. This runner serves
+that surrogate through the same slot scheduler that serves LLM tokens:
+
+  * one scheduler tick = one batched FNO application over every active
+    slot, jit-compiled once per PADDED BUCKET size (active slots are padded
+    up to the next bucket so continuous admission doesn't retrigger
+    compilation — and, because XLA results are a function of the batch
+    SHAPE, a request's output is bit-identical however admission order or
+    slot reuse interleaves it with other traffic of the same bucket);
+  * the forward is the family's distributed one when the mesh carries model
+    axes (paper Alg. 2 / 2-D pencils) — params and batch go through the
+    same ``forward_and_specs`` layout contract the training driver uses,
+    so a checkpoint trained model-parallel serves model-parallel;
+  * ingress applies the store's persisted per-channel normalization (the
+    exact stats training normalized with, snapshotted into the
+    checkpoint's ``fno_config.json``); egress inverts the target
+    normalization, so callers always see physical units;
+  * a request may ask for a multi-step autoregressive rollout: the
+    de-normalized prediction is fed back through ``feedback`` to build the
+    next input (default: repeat the final predicted saturation frame along
+    t), re-encoded, and the slot stays busy for the next tick — long-
+    horizon forecasts beyond the training window.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.fno import FNOConfig, forward_and_specs, init_params
+from repro.data.loader import Normalizer
+from repro.launch.mesh import build_fno_mesh
+from repro.train import checkpoint as ckpt_lib
+
+FNO_CONFIG_FILE = "fno_config.json"
+
+
+@dataclasses.dataclass
+class ScenarioRequest:
+    """One PDE scenario: an input field -> ``steps`` surrogate applications.
+
+    ``x`` is the RAW (physical-units) input ``[c_in, nx, ny, nz, nt]`` —
+    e.g. the binary injector map repeated along t. ``outputs`` collects one
+    de-normalized prediction ``[c_out, nx, ny, nz, nt]`` per rollout step.
+    """
+
+    rid: int
+    x: np.ndarray
+    steps: int = 1
+    outputs: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def prediction(self) -> np.ndarray:
+        """Final rollout step's de-normalized prediction."""
+        return self.outputs[-1]
+
+
+def default_feedback(y: np.ndarray, cfg: FNOConfig) -> np.ndarray:
+    """Next rollout input from a raw prediction: hold the final predicted
+    frame and repeat it along t (the saturation state the next window
+    evolves from), tiling/truncating channels to ``in_channels``."""
+    nt = cfg.grid[3]
+    nxt = np.repeat(y[..., -1:], nt, axis=-1)
+    if nxt.shape[0] != cfg.in_channels:
+        reps = -(-cfg.in_channels // nxt.shape[0])
+        nxt = np.concatenate([nxt] * reps, axis=0)[: cfg.in_channels]
+    return np.ascontiguousarray(nxt, np.float32)
+
+
+def _bucket_ladder(max_slots: int, n_dp: int) -> tuple:
+    """Padded-bucket sizes: multiples of the data-parallel size (the batch
+    sharding constraint), doubling up to max_slots — so at most
+    log2(max_slots/n_dp)+1 jit compilations ever happen."""
+    buckets, b = [], n_dp
+    while b < max_slots:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max(n_dp, -(-max_slots // n_dp) * n_dp))
+    return tuple(sorted(set(buckets)))
+
+
+class FNORunner:
+    """ModelRunner serving batched (data x model)-parallel FNO inference."""
+
+    def __init__(
+        self,
+        cfg: FNOConfig,
+        params,
+        *,
+        mesh=None,
+        model_axis=None,
+        max_slots: int = 4,
+        x_normalizer: Optional[Normalizer] = None,
+        y_normalizer: Optional[Normalizer] = None,
+        feedback: Optional[Callable] = None,
+        buckets: Optional[Sequence[int]] = None,
+    ):
+        if mesh is None:
+            mesh, model_axis, _ = build_fno_mesh(jax.device_count(), (1,))
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model_axis = model_axis
+        forward, x_spec, p_specs = forward_and_specs(
+            mesh, cfg, dp_axes=("data",), model_axis=model_axis
+        )
+        self._n_dp = mesh.shape["data"]
+        self.buckets = (
+            tuple(sorted(set(buckets)))
+            if buckets
+            else _bucket_ladder(max_slots, self._n_dp)
+        )
+        for b in self.buckets:
+            if b % self._n_dp:
+                raise ValueError(
+                    f"bucket {b} not divisible by data-parallel size "
+                    f"{self._n_dp} (buckets: {self.buckets})"
+                )
+        self.max_slots = max_slots
+
+        def ns(spec_tree):
+            return jax.tree.map(
+                lambda s: NamedSharding(mesh, s if isinstance(s, P) else P()),
+                spec_tree,
+                is_leaf=lambda s: isinstance(s, P),
+            )
+
+        self._x_sharding = NamedSharding(mesh, x_spec)
+        self.params = jax.device_put(params, ns(p_specs))
+        # one jit; XLA specializes per bucket shape on first use
+        self._forward = jax.jit(
+            forward,
+            in_shardings=(ns(p_specs), self._x_sharding),
+            out_shardings=self._x_sharding,
+        )
+        self.x_normalizer = x_normalizer or Normalizer.from_stats(None)
+        self.y_normalizer = y_normalizer or Normalizer.from_stats(None)
+        self.feedback = feedback or (lambda y: default_feedback(y, cfg))
+        # per-slot state: the ENCODED current input + remaining rollout steps
+        self._inputs: List[Optional[np.ndarray]] = [None] * max_slots
+        self._remaining: List[int] = [0] * max_slots
+        self.batched_steps = 0  # forward launches (vs scenarios served)
+
+    # -- checkpoint loading --------------------------------------------------
+    @classmethod
+    def from_checkpoint(
+        cls,
+        ckpt_dir: str,
+        *,
+        model_shards: Optional[Sequence[int]] = None,
+        n_devices: Optional[int] = None,
+        step: Optional[int] = None,
+        max_slots: int = 4,
+        feedback: Optional[Callable] = None,
+    ) -> "FNORunner":
+        """Build a runner from a ``train.py --mode fno`` checkpoint dir.
+
+        Reads the ``fno_config.json`` the trainer persists next to its
+        checkpoints (architecture + normalization snapshot), restores the
+        latest (or ``step``) params re-sharded onto the SERVING mesh —
+        which may use a different device count / model-shard layout than
+        training did (elastic restore) — and wires the normalizers so
+        ingress/egress are in physical units.
+        """
+        cfg_path = os.path.join(ckpt_dir, FNO_CONFIG_FILE)
+        try:
+            with open(cfg_path) as f:
+                saved = json.load(f)
+        except FileNotFoundError:
+            raise FileNotFoundError(
+                f"{cfg_path} not found: serve from a checkpoint directory "
+                f"written by train.py --mode fno (which persists the FNO "
+                f"architecture + normalization snapshot there)"
+            ) from None
+        cfg = FNOConfig(
+            grid=tuple(saved["grid"]),
+            modes=tuple(saved["modes"]),
+            width=saved["width"],
+            in_channels=saved["in_channels"],
+            out_channels=saved["out_channels"],
+            n_blocks=saved["n_blocks"],
+            decoder_dim=saved["decoder_dim"],
+        )
+        shards = tuple(model_shards or saved.get("model_shards") or (1,))
+        mesh, model_axis, _ = build_fno_mesh(
+            n_devices if n_devices is not None else jax.device_count(), shards
+        )
+        from repro.core.fno import param_specs  # specs on the SERVING mesh
+
+        abstract = jax.eval_shape(
+            lambda: {"params": init_params(jax.random.PRNGKey(0), cfg)}
+        )
+        shardings = {
+            "params": jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                param_specs(mesh, model_axis),
+                is_leaf=lambda s: isinstance(s, P),
+            )
+        }
+        restored, ck_step, _ = ckpt_lib.restore(
+            ckpt_dir, abstract, step=step, shardings=shardings
+        )
+        kind = saved.get("normalizer", "meanstd")
+        ndim = len(cfg.grid) + 2
+        normalized = saved.get("normalized", [])
+        x_norm = (
+            Normalizer.from_stats(saved.get("x_stats"), kind, ndim)
+            if "x" in normalized
+            else Normalizer.from_stats(None)
+        )
+        y_norm = (
+            Normalizer.from_stats(saved.get("y_stats"), kind, ndim)
+            if "y" in normalized
+            else Normalizer.from_stats(None)
+        )
+        runner = cls(
+            cfg,
+            restored["params"],
+            mesh=mesh,
+            model_axis=model_axis,
+            max_slots=max_slots,
+            x_normalizer=x_norm,
+            y_normalizer=y_norm,
+            feedback=feedback,
+        )
+        runner.restored_step = ck_step
+        return runner
+
+    # -- ModelRunner protocol ------------------------------------------------
+    def _encode(self, x_raw: np.ndarray) -> np.ndarray:
+        expected = (self.cfg.in_channels,) + tuple(self.cfg.grid)
+        if tuple(x_raw.shape) != expected:
+            raise ValueError(
+                f"scenario input shape {tuple(x_raw.shape)} != model's "
+                f"{expected}"
+            )
+        return self.x_normalizer.encode(np.asarray(x_raw, np.float32)[None])[0]
+
+    def admit(self, slot: int, req: ScenarioRequest) -> None:
+        if req.steps < 1:
+            raise ValueError(f"request {req.rid}: steps must be >= 1")
+        self._inputs[slot] = self._encode(req.x)
+        self._remaining[slot] = int(req.steps)
+
+    def warmup(self) -> float:
+        """jit-compile every bucket shape up front (zero batches); returns
+        seconds spent, so drivers can report compile time separately from
+        steady-state serving throughput."""
+        import time as _time
+
+        t0 = _time.perf_counter()
+        for b in self.buckets:
+            xb = np.zeros(
+                (b, self.cfg.in_channels) + tuple(self.cfg.grid), np.float32
+            )
+            jax.block_until_ready(self._forward(self.params, xb))
+        return _time.perf_counter() - t0
+
+    def bucket_for(self, n_active: int) -> int:
+        for b in self.buckets:
+            if b >= n_active:
+                return b
+        raise ValueError(
+            f"{n_active} active slots exceed the largest bucket "
+            f"{self.buckets[-1]}"
+        )
+
+    def step(self, slots: Sequence[Optional[ScenarioRequest]], active: Sequence[int]) -> list:
+        bucket = self.bucket_for(len(active))
+        xb = np.zeros(
+            (bucket, self.cfg.in_channels) + tuple(self.cfg.grid), np.float32
+        )
+        for j, i in enumerate(active):
+            xb[j] = self._inputs[i]
+        yb = np.asarray(self._forward(self.params, xb))
+        self.batched_steps += 1
+        finished = []
+        for j, i in enumerate(active):
+            req = slots[i]
+            y_raw = self.y_normalizer.decode(yb[j : j + 1])[0]
+            req.outputs.append(y_raw)
+            self._remaining[i] -= 1
+            if self._remaining[i] > 0:
+                self._inputs[i] = self._encode(self.feedback(y_raw))
+            else:
+                finished.append(i)
+        return finished
+
+    def retire(self, slot: int, req: ScenarioRequest) -> None:
+        self._inputs[slot] = None
+        self._remaining[slot] = 0

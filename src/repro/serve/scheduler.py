@@ -1,0 +1,103 @@
+"""Family-generic slot scheduler: continuous batching over any ModelRunner.
+
+The serving subsystem is split into two layers. This module is the
+model-agnostic half: a fixed pool of ``max_slots`` request slots, continuous
+admission (a queued request is installed the moment a slot frees — no
+full-batch barrier, "continuous batching" a la Orca/vLLM), per-slot
+progress, and retirement hooks. What a "step" computes is delegated to a
+``ModelRunner`` — one batched decode for the token engine, one batched FNO
+surrogate application for PDE scenarios — so LLM token requests and
+PDE-scenario requests share exactly this scheduling logic.
+
+The contract the runner must honor:
+
+  * ``admit(slot, request)`` installs the request's state into ``slot``
+    (prefill + cache install for tokens; normalize + stage the input field
+    for scenarios). Called once per request, before its first step.
+  * ``step(slots, active)`` advances EVERY active slot by one unit of
+    progress in a single batched computation, mutates the requests with
+    their new outputs, and returns the slot indices that just finished.
+  * ``retire(slot, request)`` releases per-slot state after the scheduler
+    pulls the request out of the pool (optional cleanup; slots are reused).
+
+Requests are opaque to the scheduler except for two attributes it manages:
+``done`` (set True on retirement) and the latency timestamps
+(``submitted_s`` / ``admitted_s`` / ``finished_s``, ``time.perf_counter``
+values) that the serving CLIs report per-request latency from.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import List, Optional, Protocol, Sequence
+
+
+class ModelRunner(Protocol):
+    """What the scheduler needs from a model family (see module docstring)."""
+
+    def admit(self, slot: int, request) -> None: ...
+
+    def step(self, slots: Sequence[Optional[object]], active: Sequence[int]) -> Sequence[int]: ...
+
+    def retire(self, slot: int, request) -> None: ...
+
+
+class Scheduler:
+    """Slot pool + continuous admission + retirement over a ModelRunner."""
+
+    def __init__(self, runner: ModelRunner, max_slots: int):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        self.runner = runner
+        self.max_slots = max_slots
+        self.slots: List[Optional[object]] = [None] * max_slots
+        self.queue: deque = deque()
+        self.finished: list = []
+        self.steps = 0
+
+    # -- API ----------------------------------------------------------------
+    def submit(self, request) -> None:
+        request.submitted_s = time.perf_counter()
+        self.queue.append(request)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    def admit_waiting(self) -> List[int]:
+        """Fill free slots from the queue (FIFO). Returns admitted slots."""
+        admitted = []
+        for i, occupant in enumerate(self.slots):
+            if occupant is not None or not self.queue:
+                continue
+            request = self.queue.popleft()
+            self.runner.admit(i, request)
+            request.admitted_s = time.perf_counter()
+            self.slots[i] = request
+            admitted.append(i)
+        return admitted
+
+    def step(self) -> int:
+        """One tick: admit, one batched runner step, retire. Returns the
+        number of slots that were active during the step."""
+        self.admit_waiting()
+        active = self.active_slots()
+        if not active:
+            return 0
+        finished = self.runner.step(self.slots, active)
+        self.steps += 1
+        for i in finished:
+            request = self.slots[i]
+            self.runner.retire(i, request)
+            request.done = True
+            request.finished_s = time.perf_counter()
+            self.finished.append(request)
+            self.slots[i] = None
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 1000) -> list:
+        while self.has_work() and self.steps < max_steps:
+            self.step()
+        return self.finished
