@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV lines (derived = compact JSON).
   loader          sharded-loader throughput, prefetch on/off overlap
   streaming       online vs simulate-then-train time-to-first-step
   serve           continuous-batching FNO serving vs sequential + oracle
+  cache           geomodel content-hash cache: cold vs warm ensemble serving
 """
 from __future__ import annotations
 
@@ -21,8 +22,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
-        bench_cloud, bench_comm, bench_cost, bench_loader, bench_scaling,
-        bench_serve, bench_streaming, bench_train,
+        bench_cache, bench_cloud, bench_comm, bench_cost, bench_loader,
+        bench_scaling, bench_serve, bench_streaming, bench_train,
     )
     from benchmarks import roofline
 
@@ -36,6 +37,7 @@ def main() -> None:
         ("loader", bench_loader.run),
         ("streaming", bench_streaming.run),
         ("serve", bench_serve.run),
+        ("cache", bench_cache.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failures = 0

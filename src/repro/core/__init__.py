@@ -17,14 +17,18 @@ from repro.core.repartition import (  # noqa: F401
 )
 from repro.core.fno import (  # noqa: F401
     FNOConfig,
+    encoder_prelift,
     fno_forward,
     fno_forward_dist,
     fno_forward_dist_2d,
+    fno_forward_split,
     forward_and_specs,
     init_params,
     make_dist_forward,
+    make_dist_forward_split,
     mse_loss,
     param_specs,
+    split_forward_and_specs,
 )
 from repro.core.pipeline import bubble_efficiency, make_pipeline_forward  # noqa: F401
 from repro.core.ulysses import ulysses_attention  # noqa: F401

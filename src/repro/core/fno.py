@@ -156,6 +156,34 @@ def _encoder(params: dict, x: jax.Array, cfg: FNOConfig) -> jax.Array:
     return jax.nn.gelu(_conv1x1(x, params["encoder"]["w"], params["encoder"]["b"]))
 
 
+def encoder_prelift(params: dict, x: jax.Array, cfg: FNOConfig, channels=None) -> jax.Array:
+    """Partial pre-activation lift of a channel SLICE of the input.
+
+    The encoder's 1x1 conv is linear in x, so the lift of the static
+    (geomodel) channels and the lift of the dynamic (well/state) channels
+    can be computed independently and summed before bias + GELU. This is
+    what lets serving cache the static-channel lift across requests and
+    rollout steps (``serve.geomodel_cache``): precompute
+    ``encoder_prelift(params, x_static, cfg, slice(0, n_static))`` once per
+    geomodel, then only the dynamic slice is lifted per request.
+
+    ``x``: [b, c_sub, nx, ny, nz, nt] where c_sub matches ``channels``
+    (a slice into ``in_channels``; default: all). Returns the
+    pre-activation partial sum [b, width, ...] — no bias, no GELU.
+    """
+    w = params["encoder"]["w"]
+    if channels is not None:
+        w = w[channels]
+    x = x.astype(cfg.dtype)
+    return jnp.einsum("bixyzt,io->boxyzt", x, w.astype(x.dtype))
+
+
+def _encoder_from_prelift(params: dict, pre: jax.Array, cfg: FNOConfig) -> jax.Array:
+    """bias + GELU over a (summed) pre-activation lift."""
+    b = params["encoder"]["b"].astype(pre.dtype)
+    return jax.nn.gelu(pre + b[None, :, None, None, None, None])
+
+
 def _decoder(params: dict, x: jax.Array, cfg: FNOConfig) -> jax.Array:
     d = params["decoder"]
     h = jax.nn.gelu(_conv1x1(x, d["w1"], d["b1"]))
@@ -179,18 +207,49 @@ def fno_block(x, w_spec, w_b, b_b, cfg: FNOConfig):
     return jax.nn.gelu(y + _bypass(x, w_b, b_b))
 
 
-def fno_forward(params: dict, x: jax.Array, cfg: FNOConfig) -> jax.Array:
-    """Single-device forward. x: [b, c_in, nx, ny, nz, nt] -> [b, c_out, ...]."""
-    h = _encoder(params, x, cfg)
+def _run_blocks(params: dict, h: jax.Array, cfg: FNOConfig, block_apply):
+    """Shared tail of every forward: scan the FNO blocks, then decode.
+    ``block_apply(h, blk)`` applies one block's params to the hidden state."""
 
     def body(h, blk):
-        h = fno_block(h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg)
-        return h, None
+        return block_apply(h, blk), None
 
     if cfg.remat:
         body = jax.checkpoint(body)
     h, _ = jax.lax.scan(body, h, params["blocks"])
     return _decoder(params, h, cfg)
+
+
+def fno_forward(params: dict, x: jax.Array, cfg: FNOConfig) -> jax.Array:
+    """Single-device forward. x: [b, c_in, nx, ny, nz, nt] -> [b, c_out, ...]."""
+    h = _encoder(params, x, cfg)
+    return _run_blocks(
+        params, h, cfg,
+        lambda h, blk: fno_block(h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg),
+    )
+
+
+def fno_forward_split(
+    params: dict, pre_static: jax.Array, x_dyn: jax.Array, cfg: FNOConfig, n_static: int
+) -> jax.Array:
+    """Single-device forward from a precomputed static-channel prelift.
+
+    ``pre_static``: [b, width, ...] — the cached partial lift of the first
+    ``n_static`` input channels (``encoder_prelift`` over the NORMALIZED
+    static channels). ``x_dyn``: [b, in_channels - n_static, ...] — the
+    normalized dynamic channels, lifted here. Equal to ``fno_forward`` on
+    the concatenated input up to float-summation order (the cold and warm
+    cache paths both go through THIS function, so they are bit-identical
+    to each other).
+    """
+    pre = pre_static.astype(cfg.dtype) + encoder_prelift(
+        params, x_dyn, cfg, slice(n_static, None)
+    )
+    h = _encoder_from_prelift(params, pre, cfg)
+    return _run_blocks(
+        params, h, cfg,
+        lambda h, blk: fno_block(h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -247,15 +306,28 @@ def _fno_forward_dist_impl(params, x, cfg, axis_name, block_fn):
     # convs contract channels only, so they are embarrassingly parallel
     # over the sharded x dim (paper Alg. 1).
     h = _encoder(params, x, cfg)
+    return _run_blocks(
+        params, h, cfg,
+        lambda h, blk: block_fn(
+            h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg, axis_name
+        ),
+    )
 
-    def body(h, blk):
-        h = block_fn(h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg, axis_name)
-        return h, None
 
-    if cfg.remat:
-        body = jax.checkpoint(body)
-    h, _ = jax.lax.scan(body, h, params["blocks"])
-    return _decoder(params, h, cfg)
+def _fno_forward_dist_split_impl(params, pre_static, x_dyn, cfg, n_static, axis_name, block_fn):
+    # Split-encoder distributed forward: the prelift add and the dynamic
+    # channel contraction are pointwise over the sharded spatial dims, so
+    # they need no communication — only the blocks do (as in the fused path).
+    pre = pre_static.astype(cfg.dtype) + encoder_prelift(
+        params, x_dyn, cfg, slice(n_static, None)
+    )
+    h = _encoder_from_prelift(params, pre, cfg)
+    return _run_blocks(
+        params, h, cfg,
+        lambda h, blk: block_fn(
+            h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg, axis_name
+        ),
+    )
 
 
 def fno_forward_dist(params, x, cfg: FNOConfig, axis_name: str = "model"):
@@ -289,6 +361,17 @@ _VARIANTS = {
 _VARIANTS_2D = {
     "paper": fno_forward_dist_2d,
     "eager": fno_forward_dist_2d_eager,
+}
+
+_BLOCKS = {
+    "paper": fno_block_dist,
+    "grady31": fno_block_dist_31,
+    "eager": fno_block_dist_eager,
+}
+
+_BLOCKS_2D = {
+    "paper": fno_block_dist_2d,
+    "eager": fno_block_dist_2d_eager,
 }
 
 
@@ -353,6 +436,78 @@ def make_dist_forward(
     return compat.shard_map(
         shard_fwd, mesh, (p_specs, x_spec), x_spec
     )
+
+
+def make_dist_forward_split(
+    mesh: Mesh,
+    cfg: FNOConfig,
+    n_static: int,
+    *,
+    dp_axes=("data",),
+    model_axis="model",
+    variant: str = "paper",
+):
+    """shard_map'd distributed forward taking (params, pre_static, x_dyn).
+
+    ``pre_static`` [b, width, ...] and ``x_dyn`` [b, c_dyn, ...] share the
+    solution tensor's layout (``input_spec``): the channel dim is never
+    sharded, so the same spec covers both. See ``fno_forward_split``.
+    """
+    if isinstance(model_axis, (tuple, list)):
+        model_axes = tuple(model_axis)
+        if len(model_axes) != 2:
+            raise ValueError(f"expected 2 model axes, got {model_axes}")
+        cfg.validate_for_parallelism_2d(*(mesh.shape[a] for a in model_axes))
+        if variant not in _BLOCKS_2D:
+            raise ValueError(
+                f"variant {variant!r} has no 2-D schedule; pick from "
+                f"{sorted(_BLOCKS_2D)}"
+            )
+        block_fn, axis = _BLOCKS_2D[variant], model_axes
+        x_spec = input_spec(dp_axes, model_axes)
+        p_specs = param_specs(mesh, model_axes)
+    else:
+        cfg.validate_for_parallelism(mesh.shape[model_axis])
+        block_fn, axis = _BLOCKS[variant], model_axis
+        x_spec = input_spec(dp_axes, model_axis)
+        p_specs = param_specs(mesh, model_axis)
+
+    def shard_fwd(params, pre_static, x_dyn):
+        return _fno_forward_dist_split_impl(
+            params, pre_static, x_dyn, cfg, n_static, axis, block_fn
+        )
+
+    return compat.shard_map(
+        shard_fwd, mesh, (p_specs, x_spec, x_spec), x_spec
+    )
+
+
+def split_forward_and_specs(
+    mesh: Mesh,
+    cfg: FNOConfig,
+    n_static: int,
+    *,
+    dp_axes=("data",),
+    model_axis=None,
+    variant: str = "paper",
+):
+    """``forward_and_specs`` for the split encoder: the returned
+    ``forward(params, pre_static, x_dyn)`` consumes a precomputed (cached)
+    static-channel prelift plus the normalized dynamic channels. Layouts
+    are identical to the fused path (channel dim unsharded), so the same
+    ``x_spec`` serves both operands.
+    """
+    x_spec = input_spec(dp_axes, model_axis)
+    p_specs = param_specs(mesh, model_axis)
+    if model_axis is None:
+        def forward(params, pre_static, x_dyn):
+            return fno_forward_split(params, pre_static, x_dyn, cfg, n_static)
+    else:
+        forward = make_dist_forward_split(
+            mesh, cfg, n_static, dp_axes=dp_axes, model_axis=model_axis,
+            variant=variant,
+        )
+    return forward, x_spec, p_specs
 
 
 def forward_and_specs(

@@ -115,11 +115,30 @@ def navier_stokes_args(i: int, args) -> Tuple:
     return (center, args.grid[0], args.nt)
 
 
-def to_training_pair(pde: str, result, nt: int) -> Tuple[np.ndarray, np.ndarray]:
+def geomodel_channel(grid, nt: int, seed: int = 0) -> np.ndarray:
+    """The shared log-permeability geomodel as a [1, nx, ny, nz, nt] input
+    channel — the SAME realization every two_phase sample was simulated on
+    (``simulate_task`` fixes the geomodel seed), repeated along t. Serving
+    reuses this exact construction for its UQ-ensemble scenarios, which is
+    what makes the content-hash geomodel cache hit across requests."""
+    from repro.data.pde.two_phase import TwoPhaseConfig, make_geomodel
+
+    k, _ = make_geomodel(TwoPhaseConfig(grid=tuple(grid)), seed=seed)
+    logk = np.log(np.asarray(k, np.float32))
+    return np.repeat(logk[None, :, :, :, None], nt, axis=-1).astype(np.float32)
+
+
+def to_training_pair(
+    pde: str, result, nt: int, geomodel: bool = False
+) -> Tuple[np.ndarray, np.ndarray]:
     """(x, y) in the FNO layout [c, nx, ny, nz, nt] (paper: the binary input
-    map is repeated along t; the target is the full solution history)."""
+    map is repeated along t; the target is the full solution history).
+    ``geomodel`` (two_phase) prepends the log-permeability field the sample
+    was simulated on as a STATIC input channel."""
     mask, field = result
     x = np.repeat(mask[None, :, :, :, None], nt, axis=-1).astype(np.float32)
+    if geomodel:
+        x = np.concatenate([geomodel_channel(mask.shape, nt), x], axis=0)
     return x, field[None].astype(np.float32)
 
 
@@ -157,6 +176,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="(nx, ny, nz); navier_stokes uses nx for all dims")
     ap.add_argument("--nt", type=int, default=4)
     ap.add_argument("--wells", type=int, default=2, help="two_phase: injectors/sample")
+    ap.add_argument("--geomodel", action="store_true",
+                    help="two_phase: prepend the shared log-permeability "
+                    "geomodel as a static input channel (what the serving "
+                    "geomodel cache keys on)")
     ap.add_argument("--out", required=True, help="dataset root; writes <out>/x, <out>/y")
     ap.add_argument("--chunks-xy", type=int, nargs=2, default=(2, 2), metavar=("CX", "CY"),
                     help="chunk counts along x/y (shard-aligned partial reads)")
@@ -198,14 +221,18 @@ def run_datagen(args) -> int:
         nx = ny = nz = args.grid[0]
         task_args = navier_stokes_args
 
-    sample = (1, nx, ny, nz, args.nt)  # [c, *spatial]
+    geomodel = bool(getattr(args, "geomodel", False))
+    if geomodel and args.pde != "two_phase":
+        raise SystemExit("--geomodel is a two_phase feature (permeability channel)")
+    n_ch = 2 if geomodel else 1  # x only; the target is always 1 channel
     cx, cy = args.chunks_xy
     if nx % cx or ny % cy:
         raise SystemExit(f"grid ({nx},{ny}) not divisible by --chunks-xy ({cx},{cy})")
     chunks = (1, 1, nx // cx, ny // cy, nz, args.nt)
-    shape = (args.n,) + sample
-    xs = open_or_create(os.path.join(args.out, "x"), shape, chunks, args.resume)
-    ys = open_or_create(os.path.join(args.out, "y"), shape, chunks, args.resume)
+    x_shape = (args.n, n_ch, nx, ny, nz, args.nt)
+    y_shape = (args.n, 1, nx, ny, nz, args.nt)
+    xs = open_or_create(os.path.join(args.out, "x"), x_shape, chunks, args.resume)
+    ys = open_or_create(os.path.join(args.out, "y"), y_shape, chunks, args.resume)
 
     # run-identity guard: task args are a pure function of (sample index,
     # pde, seed, ...), so --resume may only continue a run with the SAME
@@ -213,9 +240,12 @@ def run_datagen(args) -> int:
     gen_sig = {
         "pde": args.pde, "seed": args.seed, "nt": args.nt,
         "wells": args.wells if args.pde == "two_phase" else None,
+        "geomodel": geomodel,
     }
     for store in (xs, ys):
         prev = store.meta.get("gen")
+        if prev is not None:
+            prev = {"geomodel": False, **prev}  # stores predating the flag
         if prev is not None and prev != gen_sig:
             raise SystemExit(
                 f"store {store.root} was generated with {prev}, this run "
@@ -285,7 +315,7 @@ def run_datagen(args) -> int:
                 ]
                 pairs = ((i, f.result()) for i, f in zip(todo, futures))
             for i, result in pairs:
-                x, y = to_training_pair(args.pde, result, args.nt)
+                x, y = to_training_pair(args.pde, result, args.nt, geomodel)
                 xs.write_sample(i, x)
                 ys.write_sample(i, y)
                 if track_stats:

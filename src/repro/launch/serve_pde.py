@@ -36,22 +36,41 @@ import time
 import numpy as np
 
 
-def build_scenarios(cfg, n: int, wells: int, seed: int, steps: int):
-    """N well-placement scenarios in the model's input layout."""
+def build_scenarios(cfg, n: int, wells: int, seed: int, steps: int,
+                    n_static: int = 0, dup: int = 1):
+    """N well-placement scenarios in the model's input layout.
+
+    ``n_static > 0`` builds the UQ-ensemble workload: the first channels
+    are the SHARED log-permeability geomodel (byte-identical across every
+    scenario — ``datagen --geomodel``'s construction, so a checkpoint
+    trained on such a store serves in-distribution), only the well channel
+    varies. ``dup`` submits each scenario that many times (duplicates get
+    fresh rids; the scheduler dedups them in flight).
+    """
     from repro.data.pde.two_phase import TwoPhaseConfig, random_well_mask
+    from repro.launch.datagen import geomodel_channel
     from repro.serve import ScenarioRequest
 
     nx, ny, nz, nt = cfg.grid
     sim_cfg = TwoPhaseConfig(grid=(nx, ny, nz), nt_frames=nt)
-    requests = []
+    geo = None
+    if n_static:
+        one = geomodel_channel((nx, ny, nz), nt)
+        geo = np.concatenate([one] * n_static, axis=0)[:n_static]
+    requests, rid = [], 0
+    n_dyn = cfg.in_channels - n_static
     for i in range(n):
         mask = random_well_mask(sim_cfg, wells, seed + i)
         x = np.repeat(
             mask[None, :, :, :, None], nt, axis=-1
         ).astype(np.float32)
-        if cfg.in_channels > 1:
-            x = np.concatenate([x] * cfg.in_channels, axis=0)[: cfg.in_channels]
-        requests.append(ScenarioRequest(rid=i, x=x, steps=steps))
+        if n_dyn > 1:
+            x = np.concatenate([x] * n_dyn, axis=0)[:n_dyn]
+        if geo is not None:
+            x = np.concatenate([geo, x], axis=0)
+        for _ in range(max(1, dup)):
+            requests.append(ScenarioRequest(rid=rid, x=x.copy(), steps=steps))
+            rid += 1
     return requests, sim_cfg
 
 
@@ -78,13 +97,17 @@ def oracle_rollout(runner, x_raw: np.ndarray, steps: int):
             jax.jit(lambda p, x: fno_forward(p, x, runner.cfg)),
         )
     params, fwd = cached
+    n_static = getattr(runner, "n_static", 0)
     outs, x = [], np.asarray(x_raw, np.float32)
     for _ in range(steps):
         xe = runner.x_normalizer.encode(x[None])
         y = np.asarray(fwd(params, xe))
         y_raw = runner.y_normalizer.decode(y)[0]
         outs.append(y_raw)
-        x = runner.feedback(y_raw)
+        fb = runner.feedback(y_raw)
+        # with static geomodel channels, feedback evolves only the dynamic
+        # channels — the geomodel persists (mirrors FNORunner.step)
+        x = np.concatenate([x[:n_static], fb], axis=0) if n_static else fb
     return outs
 
 
@@ -122,6 +145,20 @@ def main():
                     help="serving-mesh model parallelism; default: the "
                     "layout recorded in the checkpoint's fno_config.json")
     ap.add_argument("--max-steps", type=int, default=10000)
+    ap.add_argument("--ensemble", action="store_true",
+                    help="UQ-ensemble mode: every scenario shares the same "
+                    "geomodel (static channels), only well locations vary; "
+                    "serves through the content-hash geomodel cache and "
+                    "reports its hit-rate")
+    ap.add_argument("--static-channels", type=int, default=1,
+                    help="ensemble mode: leading input channels that are "
+                    "the static geomodel (a --geomodel datagen store "
+                    "trains a 2-channel model -> 1 static channel)")
+    ap.add_argument("--cache-bytes", type=int, default=256 << 20,
+                    help="geomodel-cache byte budget (LRU beyond it)")
+    ap.add_argument("--dup", type=int, default=1,
+                    help="submit each scenario this many times (identical "
+                    "in-flight requests dedup onto one slot)")
     ap.add_argument("--verify", action="store_true",
                     help="check every served output against the serial "
                     "fno_forward oracle (exit nonzero on mismatch)")
@@ -135,14 +172,17 @@ def main():
 
     from repro.serve import FNORunner
 
+    n_static = args.static_channels if args.ensemble else 0
     try:
         runner = FNORunner.from_checkpoint(
             args.ckpt_dir,
             model_shards=args.model_shards,
             max_slots=args.max_batch,
+            n_static=n_static,
+            cache_bytes=args.cache_bytes,
         )
     except ValueError as e:  # library error -> CLI-flag wording
-        raise SystemExit(f"--devices/--model-shards: {e}") from None
+        raise SystemExit(f"--devices/--model-shards/--static-channels: {e}") from None
     cfg = runner.cfg
     print(
         f"serving {cfg.grid} FNO (width {cfg.width}, {cfg.n_blocks} blocks) "
@@ -152,7 +192,8 @@ def main():
     compile_s = runner.warmup()
 
     requests, sim_cfg = build_scenarios(
-        cfg, args.scenarios, args.wells, args.seed, args.rollout_steps
+        cfg, args.scenarios, args.wells, args.seed, args.rollout_steps,
+        n_static=n_static, dup=args.dup,
     )
     done, dt, sched = serve(runner, requests, args.max_batch, args.max_steps)
     lat = sorted(r.finished_s - r.submitted_s for r in done)
@@ -164,10 +205,19 @@ def main():
         f"latency p50 {lat[n // 2] * 1e3:.1f}ms p95 "
         f"{lat[min(n - 1, int(n * 0.95))] * 1e3:.1f}ms"
     )
+    if runner.cache is not None:
+        s = runner.cache.stats
+        print(
+            f"geomodel cache: hit-rate {s['hit_rate']:.3f} "
+            f"({s['hits']} hits / {s['misses']} misses, {s['entries']} "
+            f"entries, {s['bytes'] / 1e6:.2f} MB, {s['evictions']} evicted); "
+            f"dedup attached {sched.dedup_attached} follower(s)"
+        )
 
     if args.bench_sequential:
         seq_requests, _ = build_scenarios(
-            cfg, args.scenarios, args.wells, args.seed, args.rollout_steps
+            cfg, args.scenarios, args.wells, args.seed, args.rollout_steps,
+            n_static=n_static, dup=args.dup,
         )
         seq_done, seq_dt, _ = serve(runner, seq_requests, 1, args.max_steps)
         speedup = seq_dt / dt

@@ -10,4 +10,7 @@ from repro.serve.engine import (  # noqa: F401
 from repro.serve.fno_runner import (  # noqa: F401
     FNORunner, ScenarioRequest, default_feedback,
 )
+from repro.serve.geomodel_cache import (  # noqa: F401
+    GeomodelCache, GeomodelEntry, content_key,
+)
 from repro.serve.scheduler import ModelRunner, Scheduler  # noqa: F401

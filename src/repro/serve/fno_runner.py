@@ -24,22 +24,35 @@ that surrogate through the same slot scheduler that serves LLM tokens:
     de-normalized prediction is fed back through ``feedback`` to build the
     next input (default: repeat the final predicted saturation frame along
     t), re-encoded, and the slot stays busy for the next tick — long-
-    horizon forecasts beyond the training window.
+    horizon forecasts beyond the training window;
+  * with ``n_static > 0`` the first ``n_static`` input channels are STATIC
+    (the geomodel: permeability/porosity realizations). UQ ensembles reuse
+    the same geomodel across thousands of scenarios, so its normalized form
+    and encoder prelift are cached by content hash in a shared
+    ``GeomodelCache`` (the KV-cache of PDE serving) and the per-tick
+    forward only lifts the dynamic channels (``fno_forward_split``);
+    ``feedback`` then produces only the DYNAMIC channels — the geomodel
+    persists across rollout steps without re-normalize/re-lift. The runner
+    also keys requests by content (``request_key``) so the scheduler can
+    dedup identical in-flight scenarios.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.fno import FNOConfig, forward_and_specs, init_params
+from repro.core.fno import (
+    FNOConfig, forward_and_specs, init_params, split_forward_and_specs,
+)
 from repro.data.loader import Normalizer
 from repro.launch.mesh import build_fno_mesh
+from repro.serve.geomodel_cache import GeomodelCache, GeomodelEntry, content_key
 from repro.train import checkpoint as ckpt_lib
 
 FNO_CONFIG_FILE = "fno_config.json"
@@ -59,23 +72,48 @@ class ScenarioRequest:
     steps: int = 1
     outputs: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[Exception] = None
 
     @property
     def prediction(self) -> np.ndarray:
         """Final rollout step's de-normalized prediction."""
+        if not self.outputs:
+            if self.error is not None:
+                raise RuntimeError(
+                    f"request {self.rid} failed before any rollout step "
+                    f"completed: {self.error}"
+                ) from self.error
+            raise RuntimeError(
+                f"request {self.rid} has no completed rollout steps yet — "
+                f"it was not served (still queued, or run_until_done ran "
+                f"out of max_steps; check Scheduler.finished/.failed)"
+            )
         return self.outputs[-1]
 
 
-def default_feedback(y: np.ndarray, cfg: FNOConfig) -> np.ndarray:
+def default_feedback(
+    y: np.ndarray, cfg: FNOConfig, n_channels: Optional[int] = None
+) -> np.ndarray:
     """Next rollout input from a raw prediction: hold the final predicted
     frame and repeat it along t (the saturation state the next window
-    evolves from), tiling/truncating channels to ``in_channels``."""
+    evolves from), tiling/truncating channels to ``n_channels`` (default:
+    ``in_channels``; runners with static geomodel channels pass the DYNAMIC
+    channel count, since the geomodel persists across rollout steps)."""
+    want = cfg.in_channels if n_channels is None else n_channels
     nt = cfg.grid[3]
     nxt = np.repeat(y[..., -1:], nt, axis=-1)
-    if nxt.shape[0] != cfg.in_channels:
-        reps = -(-cfg.in_channels // nxt.shape[0])
-        nxt = np.concatenate([nxt] * reps, axis=0)[: cfg.in_channels]
+    if nxt.shape[0] != want:
+        reps = -(-want // nxt.shape[0])
+        nxt = np.concatenate([nxt] * reps, axis=0)[:want]
     return np.ascontiguousarray(nxt, np.float32)
+
+
+def _slice_normalizer(norm: Normalizer, sl: slice) -> Normalizer:
+    """Per-channel stats restricted to a channel slice (identity passes
+    through: its scalar mean/scale broadcast over any channel count)."""
+    if norm.identity or norm.mean.ndim == 0:
+        return norm
+    return Normalizer(norm.mean[:, sl], norm.scale[:, sl])
 
 
 def _bucket_ladder(max_slots: int, n_dp: int) -> tuple:
@@ -105,12 +143,28 @@ class FNORunner:
         y_normalizer: Optional[Normalizer] = None,
         feedback: Optional[Callable] = None,
         buckets: Optional[Sequence[int]] = None,
+        n_static: int = 0,
+        cache="auto",
+        cache_bytes: int = 256 << 20,
     ):
         if mesh is None:
             mesh, model_axis, _ = build_fno_mesh(jax.device_count(), (1,))
+        if not 0 <= n_static <= cfg.in_channels:
+            raise ValueError(
+                f"n_static={n_static} must be in [0, in_channels="
+                f"{cfg.in_channels}]"
+            )
         self.cfg = cfg
         self.mesh = mesh
         self.model_axis = model_axis
+        self.n_static = int(n_static)
+        # "auto": own cache when there are static channels; None: disabled
+        # (the uncached reference path — same split forward, no reuse); a
+        # GeomodelCache instance may be shared across runners/replicas.
+        self.cache: Optional[GeomodelCache] = (
+            GeomodelCache(cache_bytes) if (cache == "auto" and n_static) else
+            cache if isinstance(cache, GeomodelCache) else None
+        )
         forward, x_spec, p_specs = forward_and_specs(
             mesh, cfg, dp_axes=("data",), model_axis=model_axis
         )
@@ -126,6 +180,14 @@ class FNORunner:
                     f"bucket {b} not divisible by data-parallel size "
                     f"{self._n_dp} (buckets: {self.buckets})"
                 )
+        if self.buckets[-1] < max_slots:
+            # bucket_for would otherwise blow up MID-SERVING, the first
+            # time enough slots fill — validate where the %n_dp check lives
+            raise ValueError(
+                f"largest bucket {self.buckets[-1]} < max_slots {max_slots}:"
+                f" every active-set size up to max_slots needs a covering "
+                f"bucket (buckets: {self.buckets})"
+            )
         self.max_slots = max_slots
 
         def ns(spec_tree):
@@ -136,6 +198,11 @@ class FNORunner:
             )
 
         self._x_sharding = NamedSharding(mesh, x_spec)
+        # host copy of the encoder weights: cache misses compute the static
+        # prelift on host (numpy), deterministically — cold and warm paths
+        # feed the SAME arrays into the same jitted forward, so cached
+        # serving is bit-identical to uncached serving
+        self._enc_w = np.asarray(jax.device_get(params["encoder"]["w"]), np.float32)
         self.params = jax.device_put(params, ns(p_specs))
         # one jit; XLA specializes per bucket shape on first use
         self._forward = jax.jit(
@@ -143,11 +210,34 @@ class FNORunner:
             in_shardings=(ns(p_specs), self._x_sharding),
             out_shardings=self._x_sharding,
         )
+        self._forward_split = None
+        if n_static:
+            split_fwd, _, _ = split_forward_and_specs(
+                mesh, cfg, n_static, dp_axes=("data",), model_axis=model_axis
+            )
+            # pre_static [b, width, ...] and x_dyn [b, c_dyn, ...] share the
+            # solution layout (channel dim unsharded)
+            self._forward_split = jax.jit(
+                split_fwd,
+                in_shardings=(ns(p_specs), self._x_sharding, self._x_sharding),
+                out_shardings=self._x_sharding,
+            )
         self.x_normalizer = x_normalizer or Normalizer.from_stats(None)
         self.y_normalizer = y_normalizer or Normalizer.from_stats(None)
-        self.feedback = feedback or (lambda y: default_feedback(y, cfg))
-        # per-slot state: the ENCODED current input + remaining rollout steps
+        self._x_norm_static = _slice_normalizer(self.x_normalizer, slice(0, n_static))
+        self._x_norm_dyn = _slice_normalizer(self.x_normalizer, slice(n_static, None))
+        n_dyn = cfg.in_channels - n_static
+        self.feedback = feedback or (
+            lambda y: default_feedback(y, cfg, n_dyn if n_static else None)
+        )
+        # per-slot state: the ENCODED current input + remaining rollout
+        # steps; with static channels the input splits into a per-slot
+        # (key, raw static, dynamic) triple — the prelift itself lives in
+        # the cache (or is recomputed per tick when the cache is disabled)
         self._inputs: List[Optional[np.ndarray]] = [None] * max_slots
+        self._static_key: List[Optional[str]] = [None] * max_slots
+        self._static_raw: List[Optional[np.ndarray]] = [None] * max_slots
+        self._dyn: List[Optional[np.ndarray]] = [None] * max_slots
         self._remaining: List[int] = [0] * max_slots
         self.batched_steps = 0  # forward launches (vs scenarios served)
 
@@ -162,6 +252,9 @@ class FNORunner:
         step: Optional[int] = None,
         max_slots: int = 4,
         feedback: Optional[Callable] = None,
+        n_static: int = 0,
+        cache="auto",
+        cache_bytes: int = 256 << 20,
     ) -> "FNORunner":
         """Build a runner from a ``train.py --mode fno`` checkpoint dir.
 
@@ -232,24 +325,73 @@ class FNORunner:
             x_normalizer=x_norm,
             y_normalizer=y_norm,
             feedback=feedback,
+            n_static=n_static,
+            cache=cache,
+            cache_bytes=cache_bytes,
         )
         runner.restored_step = ck_step
         return runner
 
     # -- ModelRunner protocol ------------------------------------------------
-    def _encode(self, x_raw: np.ndarray) -> np.ndarray:
+    def _check_shape(self, x_raw: np.ndarray) -> np.ndarray:
         expected = (self.cfg.in_channels,) + tuple(self.cfg.grid)
         if tuple(x_raw.shape) != expected:
             raise ValueError(
                 f"scenario input shape {tuple(x_raw.shape)} != model's "
                 f"{expected}"
             )
-        return self.x_normalizer.encode(np.asarray(x_raw, np.float32)[None])[0]
+        return np.asarray(x_raw, np.float32)
+
+    def _encode(self, x_raw: np.ndarray) -> np.ndarray:
+        return self.x_normalizer.encode(self._check_shape(x_raw)[None])[0]
+
+    def _static_entry(self, key: str, x_static_raw: np.ndarray) -> GeomodelEntry:
+        """Normalized static channels + their encoder prelift, by content.
+
+        Cache hit: the stored arrays, untouched — bit-identical to what the
+        miss path computed when it inserted them. Miss (or cache disabled):
+        normalize + host prelift (``np.einsum`` against the replicated
+        encoder rows — deterministic, so cold == warm bitwise).
+        """
+        if self.cache is not None:
+            entry = self.cache.get(key)
+            if entry is not None:
+                return entry
+        normalized = self._x_norm_static.encode(
+            np.asarray(x_static_raw, np.float32)[None]
+        )[0]
+        prelift = np.einsum(
+            "ixyzt,io->oxyzt", normalized, self._enc_w[: self.n_static]
+        ).astype(np.float32)
+        entry = GeomodelEntry(key, normalized, prelift)
+        if self.cache is not None:
+            self.cache.put(key, entry)
+        return entry
+
+    def request_key(self, req: ScenarioRequest):
+        """Content key for scheduler dedup: identical input + identical
+        rollout length means byte-identical work (XLA outputs are a
+        function of batch shape, not co-batched content)."""
+        return (content_key(np.asarray(req.x, np.float32)), int(req.steps))
+
+    def fanout(self, primary: ScenarioRequest, follower: ScenarioRequest) -> None:
+        """Give a deduped follower the primary's outputs (shared arrays —
+        served outputs are treated as read-only)."""
+        follower.outputs = list(primary.outputs)
 
     def admit(self, slot: int, req: ScenarioRequest) -> None:
         if req.steps < 1:
             raise ValueError(f"request {req.rid}: steps must be >= 1")
-        self._inputs[slot] = self._encode(req.x)
+        if self.n_static:
+            x = self._check_shape(req.x)
+            static_raw = np.ascontiguousarray(x[: self.n_static])
+            # hash once per request; ticks look the entry up by key (the
+            # first tick populates the cache on a miss)
+            self._static_key[slot] = content_key(static_raw)
+            self._static_raw[slot] = static_raw
+            self._dyn[slot] = self._x_norm_dyn.encode(x[self.n_static:][None])[0]
+        else:
+            self._inputs[slot] = self._encode(req.x)
         self._remaining[slot] = int(req.steps)
 
     def warmup(self) -> float:
@@ -259,11 +401,17 @@ class FNORunner:
         import time as _time
 
         t0 = _time.perf_counter()
+        grid = tuple(self.cfg.grid)
         for b in self.buckets:
-            xb = np.zeros(
-                (b, self.cfg.in_channels) + tuple(self.cfg.grid), np.float32
-            )
-            jax.block_until_ready(self._forward(self.params, xb))
+            if self.n_static:
+                pre = np.zeros((b, self.cfg.width) + grid, np.float32)
+                xd = np.zeros(
+                    (b, self.cfg.in_channels - self.n_static) + grid, np.float32
+                )
+                jax.block_until_ready(self._forward_split(self.params, pre, xd))
+            else:
+                xb = np.zeros((b, self.cfg.in_channels) + grid, np.float32)
+                jax.block_until_ready(self._forward(self.params, xb))
         return _time.perf_counter() - t0
 
     def bucket_for(self, n_active: int) -> int:
@@ -277,25 +425,54 @@ class FNORunner:
 
     def step(self, slots: Sequence[Optional[ScenarioRequest]], active: Sequence[int]) -> list:
         bucket = self.bucket_for(len(active))
-        xb = np.zeros(
-            (bucket, self.cfg.in_channels) + tuple(self.cfg.grid), np.float32
-        )
-        for j, i in enumerate(active):
-            xb[j] = self._inputs[i]
-        yb = np.asarray(self._forward(self.params, xb))
+        grid = tuple(self.cfg.grid)
+        if self.n_static:
+            # staged per tick = per rollout step: the cache turns the
+            # static normalize+prelift into a lookup; without it (cache
+            # disabled) each tick recomputes — exactly the pre-cache cost
+            pre_b = np.zeros((bucket, self.cfg.width) + grid, np.float32)
+            xd_b = np.zeros(
+                (bucket, self.cfg.in_channels - self.n_static) + grid, np.float32
+            )
+            for j, i in enumerate(active):
+                entry = self._static_entry(self._static_key[i], self._static_raw[i])
+                pre_b[j] = entry.prelift
+                xd_b[j] = self._dyn[i]
+            yb = np.asarray(self._forward_split(self.params, pre_b, xd_b))
+        else:
+            xb = np.zeros((bucket, self.cfg.in_channels) + grid, np.float32)
+            for j, i in enumerate(active):
+                xb[j] = self._inputs[i]
+            yb = np.asarray(self._forward(self.params, xb))
         self.batched_steps += 1
         finished = []
+        n_dyn = self.cfg.in_channels - self.n_static
         for j, i in enumerate(active):
             req = slots[i]
             y_raw = self.y_normalizer.decode(yb[j : j + 1])[0]
             req.outputs.append(y_raw)
             self._remaining[i] -= 1
             if self._remaining[i] > 0:
-                self._inputs[i] = self._encode(self.feedback(y_raw))
+                fb = np.asarray(self.feedback(y_raw), np.float32)
+                if self.n_static:
+                    # feedback evolves only the DYNAMIC channels; the
+                    # geomodel persists (and stays cached) for the slot
+                    if tuple(fb.shape) != (n_dyn,) + grid:
+                        raise ValueError(
+                            f"feedback returned shape {tuple(fb.shape)}; "
+                            f"with n_static={self.n_static} it must return "
+                            f"the dynamic channels {(n_dyn,) + grid}"
+                        )
+                    self._dyn[i] = self._x_norm_dyn.encode(fb[None])[0]
+                else:
+                    self._inputs[i] = self._encode(fb)
             else:
                 finished.append(i)
         return finished
 
     def retire(self, slot: int, req: ScenarioRequest) -> None:
         self._inputs[slot] = None
+        self._static_key[slot] = None
+        self._static_raw[slot] = None
+        self._dyn[slot] = None
         self._remaining[slot] = 0

@@ -1,0 +1,115 @@
+"""Content-hash geomodel cache — the KV-cache of PDE serving.
+
+The paper's payoff workloads (well-placement optimization, UQ) run
+thousands of scenarios against the *same* permeability geomodel: only the
+well locations (and, across rollout steps, the saturation state) change.
+Without a cache every request re-normalizes the geomodel channels and
+re-lifts them through the encoder, per request AND per rollout step — the
+PDE analogue of an LLM server re-prefilling a shared prompt prefix for
+every completion.
+
+This module caches the geomodel-dependent intermediates keyed by a content
+hash of the RAW static channels:
+
+  * ``normalized`` — the static channels after the store's persisted
+    per-channel normalization (what ingress would recompute per request);
+  * ``prelift``    — their pre-activation encoder lift
+    (``core.fno.encoder_prelift``), the reusable prefix of the split
+    forward: the per-request forward only lifts the dynamic channels and
+    adds this cached partial sum.
+
+Entries are LRU-evicted against a byte budget. Eviction only drops the
+cache's reference — slots serving an in-flight request hold their own
+reference to the entry's arrays, so eviction never invalidates active
+work (no pinning needed). Counters (hits/misses/evictions/bytes) feed the
+serving CLIs' hit-rate reports; lookups happen once per slot per scheduler
+tick, so the hit-rate reflects reuse across requests AND rollout steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+
+def content_key(arr: np.ndarray) -> str:
+    """Content hash of an array's dtype + shape + raw bytes."""
+    a = np.ascontiguousarray(arr)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(a)
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class GeomodelEntry:
+    """Cached intermediates for one geomodel (one static-channel content)."""
+
+    key: str
+    normalized: np.ndarray  # [c_static, *grid] encoded static channels
+    prelift: np.ndarray     # [width, *grid] their encoder pre-activation lift
+
+    @property
+    def nbytes(self) -> int:
+        return self.normalized.nbytes + self.prelift.nbytes
+
+
+class GeomodelCache:
+    """LRU cache of ``GeomodelEntry`` under a byte budget."""
+
+    def __init__(self, max_bytes: int = 256 << 20):
+        if max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        self.max_bytes = max_bytes
+        self._entries: "OrderedDict[str, GeomodelEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: str) -> Optional[GeomodelEntry]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)  # MRU
+        self.hits += 1
+        return entry
+
+    def put(self, key: str, entry: GeomodelEntry) -> GeomodelEntry:
+        """Insert (or refresh) an entry, then evict LRU-first until the
+        byte budget holds. An entry larger than the whole budget is evicted
+        immediately — the budget is strict; callers keep their reference."""
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes -= old.nbytes
+        self._entries[key] = entry
+        self.bytes += entry.nbytes
+        while self.bytes > self.max_bytes and self._entries:
+            _, evicted = self._entries.popitem(last=False)
+            self.bytes -= evicted.nbytes
+            self.evictions += 1
+        return entry
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.bytes = 0
+
+    @property
+    def stats(self) -> dict:
+        lookups = self.hits + self.misses
+        return {
+            "entries": len(self._entries),
+            "bytes": self.bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+        }

@@ -4,30 +4,44 @@ The serving subsystem is split into two layers. This module is the
 model-agnostic half: a fixed pool of ``max_slots`` request slots, continuous
 admission (a queued request is installed the moment a slot frees — no
 full-batch barrier, "continuous batching" a la Orca/vLLM), per-slot
-progress, and retirement hooks. What a "step" computes is delegated to a
-``ModelRunner`` — one batched decode for the token engine, one batched FNO
-surrogate application for PDE scenarios — so LLM token requests and
+progress, retirement hooks, and in-flight request DEDUP: when the runner
+can key requests by content (``request_key``), an identical request
+submitted while its twin is queued/active attaches to that primary as a
+follower — it never occupies a slot, and the primary's outputs are fanned
+out to it at retirement (``fanout``). What a "step" computes is delegated
+to a ``ModelRunner`` — one batched decode for the token engine, one batched
+FNO surrogate application for PDE scenarios — so LLM token requests and
 PDE-scenario requests share exactly this scheduling logic.
 
 The contract the runner must honor:
 
   * ``admit(slot, request)`` installs the request's state into ``slot``
     (prefill + cache install for tokens; normalize + stage the input field
-    for scenarios). Called once per request, before its first step.
+    for scenarios). Called once per request, before its first step. If it
+    raises, the scheduler marks the request FAILED (``request.error`` set,
+    collected in ``Scheduler.failed``) and stays serviceable — the slot is
+    offered to the next queued request.
   * ``step(slots, active)`` advances EVERY active slot by one unit of
     progress in a single batched computation, mutates the requests with
     their new outputs, and returns the slot indices that just finished.
   * ``retire(slot, request)`` releases per-slot state after the scheduler
     pulls the request out of the pool (optional cleanup; slots are reused).
+  * ``request_key(request)`` (optional) — a hashable content key (or None
+    to opt a request out); equal keys mean byte-identical work, enabling
+    dedup. Runners providing it must also provide
+    ``fanout(primary, follower)`` to copy a retired primary's outputs onto
+    a follower.
 
-Requests are opaque to the scheduler except for two attributes it manages:
-``done`` (set True on retirement) and the latency timestamps
-(``submitted_s`` / ``admitted_s`` / ``finished_s``, ``time.perf_counter``
-values) that the serving CLIs report per-request latency from.
+Requests are opaque to the scheduler except for the attributes it manages:
+``done`` (set True on retirement/failure), ``error`` (the admit exception,
+on failure), and the latency timestamps (``submitted_s`` / ``admitted_s``
+/ ``finished_s``, ``time.perf_counter`` values) that the serving CLIs
+report per-request latency from.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from typing import List, Optional, Protocol, Sequence
 
@@ -43,9 +57,9 @@ class ModelRunner(Protocol):
 
 
 class Scheduler:
-    """Slot pool + continuous admission + retirement over a ModelRunner."""
+    """Slot pool + continuous admission + dedup + retirement over a ModelRunner."""
 
-    def __init__(self, runner: ModelRunner, max_slots: int):
+    def __init__(self, runner: ModelRunner, max_slots: int, *, dedup: bool = True):
         if max_slots < 1:
             raise ValueError(f"max_slots must be >= 1, got {max_slots}")
         self.runner = runner
@@ -53,11 +67,30 @@ class Scheduler:
         self.slots: List[Optional[object]] = [None] * max_slots
         self.queue: deque = deque()
         self.finished: list = []
+        self.failed: list = []
         self.steps = 0
+        # dedup state: primaries in flight by content key; followers by
+        # primary identity (requests need not be hashable themselves)
+        self._request_key = getattr(runner, "request_key", None) if dedup else None
+        self._primary_by_key: dict = {}
+        self._followers: dict = {}
+        self.dedup_attached = 0
 
     # -- API ----------------------------------------------------------------
     def submit(self, request) -> None:
         request.submitted_s = time.perf_counter()
+        if self._request_key is not None:
+            key = self._request_key(request)
+            if key is not None:
+                primary = self._primary_by_key.get(key)
+                if primary is not None:
+                    # identical work already queued/active: ride its slot
+                    request.admitted_s = time.perf_counter()
+                    self._followers.setdefault(id(primary), []).append(request)
+                    self.dedup_attached += 1
+                    return
+                self._primary_by_key[key] = request
+                request._dedup_key = key
         self.queue.append(request)
 
     def active_slots(self) -> List[int]:
@@ -66,17 +99,34 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slots)
 
+    def pending(self) -> int:
+        """Requests not yet finished/failed: queued + active + followers."""
+        n_active = len(self.active_slots())
+        n_followers = sum(len(f) for f in self._followers.values())
+        return len(self.queue) + n_active + n_followers
+
     def admit_waiting(self) -> List[int]:
-        """Fill free slots from the queue (FIFO). Returns admitted slots."""
+        """Fill free slots from the queue (FIFO). Returns admitted slots.
+
+        A request whose ``runner.admit`` raises is marked failed (not
+        silently dropped) and the freed slot is offered to the next queued
+        request — one bad request cannot wedge the pool.
+        """
         admitted = []
         for i, occupant in enumerate(self.slots):
-            if occupant is not None or not self.queue:
+            if occupant is not None:
                 continue
-            request = self.queue.popleft()
-            self.runner.admit(i, request)
-            request.admitted_s = time.perf_counter()
-            self.slots[i] = request
-            admitted.append(i)
+            while self.queue:
+                request = self.queue.popleft()
+                try:
+                    self.runner.admit(i, request)
+                except Exception as exc:  # noqa: BLE001 — any admit error
+                    self._fail(request, exc)
+                    continue
+                request.admitted_s = time.perf_counter()
+                self.slots[i] = request
+                admitted.append(i)
+                break
         return admitted
 
     def step(self) -> int:
@@ -95,9 +145,49 @@ class Scheduler:
             request.finished_s = time.perf_counter()
             self.finished.append(request)
             self.slots[i] = None
+            self._resolve_dedup(request)
         return len(active)
 
     def run_until_done(self, max_steps: int = 1000) -> list:
+        """Drive ticks until the pool drains. If ``max_steps`` is exhausted
+        with work still queued/active, the partial result is NOT silent: a
+        RuntimeWarning reports how many requests are unfinished."""
         while self.has_work() and self.steps < max_steps:
             self.step()
+        if self.has_work():
+            warnings.warn(
+                f"run_until_done: max_steps={max_steps} exhausted with "
+                f"{self.pending()} request(s) still queued/active "
+                f"({len(self.finished)} finished, {len(self.failed)} failed) "
+                f"— raise max_steps",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         return self.finished
+
+    # -- internals ----------------------------------------------------------
+    def _fail(self, request, exc: Exception) -> None:
+        request.error = exc
+        request.done = True
+        request.finished_s = time.perf_counter()
+        self.failed.append(request)
+        # followers were promised this primary's outputs: fail them too
+        key = getattr(request, "_dedup_key", None)
+        if key is not None and self._primary_by_key.get(key) is request:
+            del self._primary_by_key[key]
+        for follower in self._followers.pop(id(request), []):
+            follower.error = exc
+            follower.done = True
+            follower.finished_s = time.perf_counter()
+            self.failed.append(follower)
+
+    def _resolve_dedup(self, request) -> None:
+        key = getattr(request, "_dedup_key", None)
+        if key is not None and self._primary_by_key.get(key) is request:
+            del self._primary_by_key[key]
+        followers = self._followers.pop(id(request), [])
+        for follower in followers:
+            self.runner.fanout(request, follower)
+            follower.done = True
+            follower.finished_s = time.perf_counter()
+            self.finished.append(follower)

@@ -1,0 +1,326 @@
+"""Geomodel content-hash cache + serving request-lifecycle regressions.
+
+Covers this PR's contract:
+  * property: WARM-cache ensemble serving is BITWISE-identical to the
+    cold-cache path under mixed admission order, slot reuse, shared/unique
+    geomodels, and multi-step rollouts (the cache only changes whether the
+    deterministic host prelift is recomputed, never its value);
+  * the split forward (cached static prelift + dynamic lift) matches the
+    fused ``fno_forward`` to float tolerance;
+  * scheduler dedup: identical in-flight requests ride one slot and every
+    follower gets the primary's outputs at retirement;
+  * LRU eviction honors the byte budget, and eviction never invalidates
+    an entry a caller still holds;
+  * lifecycle regressions: a raising ``admit`` marks the request failed
+    without wedging the pool; the bucket ladder must cover ``max_slots``
+    at construction; ``run_until_done`` warns on exhausted ``max_steps``
+    and ``prediction`` raises a clear error on unserved requests.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FNOConfig, fno_forward, init_params
+from repro.core.partition import make_mesh
+from repro.data.loader import Normalizer
+from repro.serve import (
+    FNORunner, GeomodelCache, GeomodelEntry, ScenarioRequest, Scheduler,
+    content_key,
+)
+
+# Tiny FNO with 2 static (geomodel) + 1 dynamic channel; module-level so
+# the jit cache persists across hypothesis examples.
+N_STATIC = 2
+CFG = FNOConfig(
+    grid=(8, 4, 4, 2), modes=(2, 2, 2, 1), width=2, n_blocks=2,
+    decoder_dim=4, in_channels=N_STATIC + 1,
+)
+PARAMS = init_params(jax.random.PRNGKey(3), CFG)
+BUCKET = 4
+X_STATS = {"mean": [0.2, -0.4, 0.1], "std": [0.7, 1.3, 0.8]}
+Y_STATS = {"mean": [0.1], "std": [0.8]}
+
+
+def _make_runner(**kw):
+    kw.setdefault("max_slots", BUCKET)
+    kw.setdefault("buckets", (BUCKET,))
+    return FNORunner(
+        CFG,
+        PARAMS,
+        mesh=make_mesh((1,), ("data",)),
+        model_axis=None,
+        x_normalizer=Normalizer.from_stats(X_STATS, "meanstd"),
+        y_normalizer=Normalizer.from_stats(Y_STATS, "meanstd"),
+        n_static=N_STATIC,
+        **kw,
+    )
+
+
+RUNNER = _make_runner(cache=GeomodelCache())
+
+# a small pool of geomodels so hypothesis examples exercise SHARING
+GEOMODELS = [
+    np.random.default_rng(100 + g)
+    .normal(size=(N_STATIC,) + CFG.grid)
+    .astype(np.float32)
+    for g in range(3)
+]
+
+
+def _scenario(rid: int, geo: int, steps: int = 1) -> ScenarioRequest:
+    rng = np.random.default_rng(1000 + rid)
+    dyn = rng.normal(size=(1,) + CFG.grid).astype(np.float32)
+    x = np.concatenate([GEOMODELS[geo], dyn], axis=0)
+    return ScenarioRequest(rid=rid, x=x, steps=steps)
+
+
+def _serve(runner, requests, max_slots, interleave=0, split=None):
+    sched = Scheduler(runner, max_slots)
+    split = len(requests) if split is None else min(split, len(requests))
+    for r in requests[:split]:
+        sched.submit(r)
+    for _ in range(interleave):
+        sched.step()
+    for r in requests[split:]:
+        sched.submit(r)
+    done = sched.run_until_done(max_steps=500)
+    assert len(done) == len(requests)
+    return done, sched
+
+
+# ---------------------------------------------------------------------------
+# Tentpole property: warm cache is bitwise-invisible in the outputs.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    geos=st.lists(st.integers(0, 2), min_size=1, max_size=7),
+    max_slots=st.integers(1, BUCKET),
+    split=st.integers(0, 7),
+    steps=st.integers(1, 3),
+    interleave=st.integers(0, 3),
+)
+def test_warm_cache_bitwise_identical_to_cold(
+    geos, max_slots, split, steps, interleave
+):
+    """Cold (cache disabled) and warm (shared cache) serving of the same
+    mixed-geomodel ensemble produce bit-identical outputs per request."""
+    RUNNER.cache = None
+    cold, _ = _serve(
+        RUNNER, [_scenario(i, g, steps) for i, g in enumerate(geos)],
+        max_slots, interleave, split,
+    )
+    RUNNER.cache = GeomodelCache()
+    warm, _ = _serve(
+        RUNNER, [_scenario(i, g, steps) for i, g in enumerate(geos)],
+        max_slots, interleave, split,
+    )
+    assert RUNNER.cache.stats["misses"] == len(set(geos))
+    for rc, rw in zip(
+        sorted(cold, key=lambda r: r.rid), sorted(warm, key=lambda r: r.rid)
+    ):
+        assert rc.rid == rw.rid and len(rc.outputs) == len(rw.outputs) == steps
+        for yc, yw in zip(rc.outputs, rw.outputs):
+            np.testing.assert_array_equal(yc, yw)
+
+
+def test_cache_hit_rate_counts_requests_and_rollout_steps():
+    """One shared geomodel, N scenarios x S steps: lookups happen per slot
+    per tick, so exactly one miss and N*S - 1 hits."""
+    RUNNER.cache = GeomodelCache()
+    n, steps = 6, 2
+    _serve(RUNNER, [_scenario(i, 0, steps) for i in range(n)], BUCKET)
+    s = RUNNER.cache.stats
+    assert (s["misses"], s["hits"]) == (1, n * steps - 1)
+    assert s["hit_rate"] == pytest.approx(1 - 1 / (n * steps))
+
+
+def test_split_forward_matches_fused_to_tolerance():
+    """The split (prelift + dynamic lift) path equals the fused single-
+    encoder forward up to float summation order."""
+    fwd = jax.jit(lambda p, x: fno_forward(p, x, CFG))
+    for i in range(4):
+        req = _scenario(i, i % 3)
+        done, _ = _serve(RUNNER, [req], 1)
+        xe = RUNNER.x_normalizer.encode(np.asarray(req.x, np.float32)[None])
+        expected = RUNNER.y_normalizer.decode(np.asarray(fwd(PARAMS, xe)))[0]
+        np.testing.assert_allclose(req.prediction, expected, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler dedup: identical in-flight requests ride one slot.
+# ---------------------------------------------------------------------------
+
+def test_dedup_fans_out_primary_outputs_to_followers():
+    base = _scenario(0, 0, steps=2)
+    dups = [
+        ScenarioRequest(rid=i, x=base.x.copy(), steps=2) for i in (1, 2)
+    ]
+    other = _scenario(3, 1, steps=2)
+    done, sched = _serve(RUNNER, [base, *dups, other], 2)
+    assert sched.dedup_attached == 2
+    # followers never occupied a slot: 3-deep identical work took the
+    # engine steps of 2 distinct requests in 2 slots
+    assert sched.steps == 2
+    for d in dups:
+        assert d.done and len(d.outputs) == 2
+        for got, exp in zip(d.outputs, base.outputs):
+            np.testing.assert_array_equal(got, exp)
+    assert not np.array_equal(other.prediction, base.prediction)
+
+
+def test_dedup_respects_rollout_length_and_opt_out():
+    """Same content but different steps is NOT identical work; dedup=False
+    disables attaching entirely."""
+    base = _scenario(0, 0, steps=1)
+    longer = ScenarioRequest(rid=1, x=base.x.copy(), steps=2)
+    done, sched = _serve(RUNNER, [base, longer], 2)
+    assert sched.dedup_attached == 0
+    assert len(base.outputs) == 1 and len(longer.outputs) == 2
+
+    twin = ScenarioRequest(rid=2, x=base.x.copy(), steps=1)
+    sched = Scheduler(RUNNER, 2, dedup=False)
+    sched.submit(base)
+    sched.submit(twin)
+    assert sched.run_until_done(max_steps=50) and sched.dedup_attached == 0
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction under the byte budget.
+# ---------------------------------------------------------------------------
+
+def _entry(seed: int) -> GeomodelEntry:
+    arr = np.random.default_rng(seed).normal(size=(4, 4)).astype(np.float32)
+    return GeomodelEntry(content_key(arr), arr, arr * 2.0)
+
+
+def test_eviction_respects_byte_budget_lru_first():
+    e = [_entry(i) for i in range(4)]
+    per = e[0].nbytes
+    cache = GeomodelCache(max_bytes=2 * per)  # room for exactly two
+    cache.put(e[0].key, e[0])
+    cache.put(e[1].key, e[1])
+    assert len(cache) == 2 and cache.bytes == 2 * per
+    assert cache.get(e[0].key) is e[0]  # touch: e[1] is now LRU
+    cache.put(e[2].key, e[2])
+    assert cache.get(e[1].key) is None  # evicted LRU-first
+    assert cache.get(e[0].key) is e[0] and cache.get(e[2].key) is e[2]
+    assert cache.bytes <= cache.max_bytes and cache.evictions == 1
+    # an entry larger than the whole budget: strict budget, caller keeps
+    # its own reference (returned), nothing retained
+    big_arr = np.zeros((64, 64), np.float32)
+    big = GeomodelEntry(content_key(big_arr), big_arr, big_arr)
+    assert cache.put(big.key, big) is big
+    assert cache.get(big.key) is None and cache.bytes <= cache.max_bytes
+    # re-putting an existing key refreshes, never double-counts
+    cache.put(e[0].key, e[0])
+    assert cache.bytes <= 2 * per
+    with pytest.raises(ValueError, match="max_bytes"):
+        GeomodelCache(max_bytes=0)
+
+
+def test_eviction_never_invalidates_served_requests():
+    """A budget that can hold only ONE geomodel still serves a two-geomodel
+    ensemble correctly: slots keep their own entry references."""
+    one = GEOMODELS[0].nbytes // N_STATIC * (N_STATIC + CFG.width) + 1
+    RUNNER.cache = GeomodelCache(max_bytes=one)
+    geos = [0, 1, 0, 1, 0, 1]
+    done, _ = _serve(RUNNER, [_scenario(i, g, 2) for i, g in enumerate(geos)], BUCKET)
+    assert RUNNER.cache.evictions > 0
+    RUNNER.cache = None
+    cold, _ = _serve(RUNNER, [_scenario(i, g, 2) for i, g in enumerate(geos)], BUCKET)
+    for rw, rc in zip(done, cold):
+        for yw, yc in zip(rw.outputs, rc.outputs):
+            np.testing.assert_array_equal(yw, yc)
+
+
+def test_datagen_geomodel_prepends_shared_static_channel(tmp_path):
+    """``datagen --geomodel`` writes a 2-channel x store whose leading
+    channel is the SAME log-permeability realization in every sample —
+    the content the serving cache keys on."""
+    from repro.data import ArrayStore
+    from repro.launch.datagen import geomodel_channel, main as datagen
+
+    d = str(tmp_path / "ds")
+    datagen([
+        "--pde", "two_phase", "--n", "2", "--grid", "8", "8", "4",
+        "--nt", "2", "--out", d, "--backend", "thread", "--workers", "2",
+        "--geomodel",
+    ])
+    xs = ArrayStore.open(f"{d}/x")
+    assert xs.shape[1] == 2 and len(xs.meta["stats"]["mean"]) == 2
+    full = xs.read_slice((slice(0, 2),) + (slice(None),) * 5)
+    np.testing.assert_array_equal(full[0, 0], full[1, 0])  # shared geomodel
+    np.testing.assert_array_equal(full[0, 0], geomodel_channel((8, 8, 4), 2)[0])
+    assert full[0, 0].std() > 0  # a real field, not a constant fill
+
+
+def test_content_key_discriminates():
+    a = np.arange(8, dtype=np.float32)
+    assert content_key(a) == content_key(a.copy())
+    assert content_key(a) != content_key(a.astype(np.float64))
+    assert content_key(a) != content_key(a.reshape(2, 4))
+    b = a.copy()
+    b[3] = np.nextafter(b[3], np.float32(np.inf))  # one-ulp flip
+    assert content_key(a) != content_key(b)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle regressions.
+# ---------------------------------------------------------------------------
+
+def test_failing_admit_marks_failed_and_pool_stays_serviceable():
+    bad = ScenarioRequest(rid=0, x=_scenario(0, 0).x, steps=0)  # admit raises
+    wrong_shape = ScenarioRequest(
+        rid=1, x=np.zeros((CFG.in_channels, 2, 2, 2, 2), np.float32)
+    )
+    good = [_scenario(i, 0) for i in range(2, 5)]
+    sched = Scheduler(RUNNER, 2)
+    for r in (bad, wrong_shape, *good):
+        sched.submit(r)
+    done = sched.run_until_done(max_steps=50)
+    assert sorted(r.rid for r in done) == [2, 3, 4]
+    assert sorted(r.rid for r in sched.failed) == [0, 1]
+    for r in sched.failed:
+        assert r.done and r.error is not None
+        with pytest.raises(RuntimeError, match=f"request {r.rid} failed"):
+            r.prediction
+    assert sched.pending() == 0
+
+
+def test_failing_primary_fails_its_followers():
+    bad = ScenarioRequest(rid=0, x=_scenario(0, 0).x, steps=0)
+    twin = ScenarioRequest(rid=1, x=bad.x.copy(), steps=0)
+    sched = Scheduler(RUNNER, 2)
+    sched.submit(bad)
+    sched.submit(twin)
+    assert sched.dedup_attached == 1
+    sched.run_until_done(max_steps=50)
+    assert sorted(r.rid for r in sched.failed) == [0, 1]
+    assert twin.error is not None and sched.pending() == 0
+
+
+def test_bucket_ladder_must_cover_max_slots_at_construction():
+    with pytest.raises(ValueError, match="largest bucket"):
+        _make_runner(max_slots=8, buckets=(2, 4))
+
+
+def test_run_until_done_warns_on_exhausted_max_steps():
+    sched = Scheduler(RUNNER, 1)
+    reqs = [_scenario(i, 0, steps=3) for i in range(2)]
+    for r in reqs:
+        sched.submit(r)
+    with pytest.warns(RuntimeWarning, match="max_steps=2 exhausted.*2 request"):
+        done = sched.run_until_done(max_steps=2)
+    assert len(done) < 2
+    unserved = next(r for r in reqs if not r.outputs)
+    with pytest.raises(RuntimeError, match="no completed rollout steps"):
+        unserved.prediction
+    # the drained remainder finishes on a fresh budget
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        sched.steps = 0
+        assert len(sched.run_until_done(max_steps=50)) == 2
