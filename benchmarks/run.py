@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV lines (derived = compact JSON).
   streaming       online vs simulate-then-train time-to-first-step
   serve           continuous-batching FNO serving vs sequential + oracle
   cache           geomodel content-hash cache: cold vs warm ensemble serving
+  spectral        fused Pallas spectral path: HBM bytes, plane cache, a2a overlap
 """
 from __future__ import annotations
 
@@ -23,7 +24,8 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_cache, bench_cloud, bench_comm, bench_cost, bench_loader,
-        bench_scaling, bench_serve, bench_streaming, bench_train,
+        bench_scaling, bench_serve, bench_spectral, bench_streaming,
+        bench_train,
     )
     from benchmarks import roofline
 
@@ -38,6 +40,7 @@ def main() -> None:
         ("streaming", bench_streaming.run),
         ("serve", bench_serve.run),
         ("cache", bench_cache.run),
+        ("spectral", bench_spectral.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failures = 0

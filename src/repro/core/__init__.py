@@ -11,6 +11,7 @@ Public surface:
 from repro.core.partition import CartPartition, make_mesh  # noqa: F401
 from repro.core.repartition import (  # noqa: F401
     repartition,
+    repartition_chunked,
     repartition_multi,
     repartition_multi_t,
     repartition_t,
@@ -28,6 +29,8 @@ from repro.core.fno import (  # noqa: F401
     make_dist_forward_split,
     mse_loss,
     param_specs,
+    params_with_planes,
+    params_without_planes,
     split_forward_and_specs,
 )
 from repro.core.pipeline import bubble_efficiency, make_pipeline_forward  # noqa: F401

@@ -97,31 +97,69 @@ def pad_modes(
 # Serial oracle: S ∘ F over all four dims at once.
 # ---------------------------------------------------------------------------
 
-def serial_forward(x: jax.Array, modes: Sequence[int]) -> jax.Array:
+def serial_forward(
+    x: jax.Array, modes: Sequence[int], *, truncate: bool = True
+) -> jax.Array:
     """rFFT over t + 3-D FFT over (x,y,z), then truncation.
 
     x: real [b,c,nx,ny,nz,nt]. Equivalent to rfftn over all four dims, but
     XLA only lowers FFTs of rank <= 3, so the 4-D transform is composed
     from a 1-D rFFT and a 3-D FFT (per-axis FFTs commute).
+
+    ``truncate=False`` returns the full spectrum — used by the fused
+    Pallas path, whose kernel performs S (and S^T) itself.
     """
     xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
     xf = jnp.fft.fftn(xf, axes=(XDIM, YDIM, ZDIM))
-    return truncate_modes(xf, modes)
+    if truncate:
+        xf = truncate_modes(xf, modes)
+    return xf
 
 
 def serial_adjoint(
-    xf: jax.Array, grid: Sequence[int], out_dtype=jnp.float32
+    xf: jax.Array,
+    grid: Sequence[int],
+    out_dtype=jnp.float32,
+    *,
+    pre_padded: bool = False,
 ) -> jax.Array:
     """Zero-pad then inverse transform; grid is the real-space (nx,ny,nz,nt).
 
     Composed as 3-D iFFT over (x,y,z) + 1-D irFFT over t for the same
     rank-3 XLA limit; the 1/N scaling factors multiply to irfftn's.
+
+    ``pre_padded=True`` means ``xf`` is already the full-size spectrum
+    (the fused Pallas kernel zero-fills S^T in-kernel) — skip pad_modes.
     """
     nx, ny, nz, nt = grid
-    full = pad_modes(xf, (nx, ny, nz, nt // 2 + 1))
+    full = xf if pre_padded else pad_modes(xf, (nx, ny, nz, nt // 2 + 1))
     full = jnp.fft.ifftn(full, axes=(XDIM, YDIM, ZDIM))
     y = jnp.fft.irfft(full, n=nt, axis=TDIM)
     return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Communication/compute overlap: chunk the channel extent so each chunk's
+# repartition (all-to-all) is an independent collective that a latency-
+# hiding scheduler can fly while the next chunk's local FFTs compute.
+# Every op in the distributed pipelines (FFTs over spatial/time dims,
+# truncate/pad slices, all-to-alls) treats the channel dim as a pure batch
+# dim, so running the WHOLE pipeline per channel-slice and concatenating
+# is bit-identical to the unchunked call — verified by the bit-identity
+# check in tests/distributed_checks.py.
+# ---------------------------------------------------------------------------
+
+def _chunk_channels(fn, x: jax.Array, chunks: int) -> jax.Array:
+    n = min(int(chunks), x.shape[CDIM])
+    if n <= 1:
+        return fn(x)
+    c = x.shape[CDIM]
+    bounds = [round(i * c / n) for i in range(n + 1)]
+    parts = [
+        fn(jax.lax.slice_in_dim(x, lo, hi, axis=CDIM))
+        for lo, hi in zip(bounds, bounds[1:])
+    ]
+    return jnp.concatenate(parts, axis=CDIM)
 
 
 # ---------------------------------------------------------------------------
@@ -129,32 +167,48 @@ def serial_adjoint(
 # ---------------------------------------------------------------------------
 
 def dist_forward(
-    x: jax.Array, modes: Sequence[int], axis_name: str
+    x: jax.Array,
+    modes: Sequence[int],
+    axis_name: str,
+    *,
+    trunc_x: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
     """Paper Alg. 2 forward transform: S_x F_x R_{x->y} S_{yzt} F_{yzt}.
 
     In: local real [b, c, nx/P, ny, nz, nt].
-    Out: local complex [b, c, 2mx, 2my/P, 2mz, mt].
+    Out: local complex [b, c, 2mx, 2my/P, 2mz, mt]
+    (``trunc_x=False`` skips the final S_x — the fused Pallas kernel does
+    it — leaving the x dim at full size nx).
 
     Truncation along y/z/t happens BEFORE the repartition — this is the
     paper's communication optimization (~160x less data on the wire than
     re-partitioning the full spectrum as in Grady et al. [31]).
+
+    ``comm_chunks > 1`` runs the pipeline per channel-slice (bit-identical;
+    see ``_chunk_channels``) so each slice's all-to-all overlaps the next
+    slice's FFTs under a latency-hiding schedule.
     """
     mx, my, mz, mt = modes
-    # F_{yzt}: local FFT over unsharded dims (rFFT on t).
-    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
-    xf = jnp.fft.fft(xf, axis=YDIM)
-    xf = jnp.fft.fft(xf, axis=ZDIM)
-    # S_{yzt}
-    xf = truncate_full(xf, YDIM, my)
-    xf = truncate_full(xf, ZDIM, mz)
-    xf = truncate_rfft(xf, TDIM, mt)
-    # R_{x->y}
-    xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=axis_name)
-    # F_x, S_x
-    xf = jnp.fft.fft(xf, axis=XDIM)
-    xf = truncate_full(xf, XDIM, mx)
-    return xf
+
+    def body(x):
+        # F_{yzt}: local FFT over unsharded dims (rFFT on t).
+        xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
+        xf = jnp.fft.fft(xf, axis=YDIM)
+        xf = jnp.fft.fft(xf, axis=ZDIM)
+        # S_{yzt}
+        xf = truncate_full(xf, YDIM, my)
+        xf = truncate_full(xf, ZDIM, mz)
+        xf = truncate_rfft(xf, TDIM, mt)
+        # R_{x->y}
+        xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=axis_name)
+        # F_x, S_x
+        xf = jnp.fft.fft(xf, axis=XDIM)
+        if trunc_x:
+            xf = truncate_full(xf, XDIM, mx)
+        return xf
+
+    return _chunk_channels(body, x, comm_chunks)
 
 
 def dist_adjoint(
@@ -162,26 +216,37 @@ def dist_adjoint(
     grid: Sequence[int],
     axis_name: str,
     out_dtype=jnp.float32,
+    *,
+    pad_x: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
     """Paper Alg. 2 inverse: F_{yzt}^T S_{yzt}^T R^T F_x^T S_x^T.
 
-    In: local complex [b, c, 2mx, 2my/P, 2mz, mt].
+    In: local complex [b, c, 2mx, 2my/P, 2mz, mt] (or x already full-size
+    when ``pad_x=False`` — the fused kernel zero-filled S_x^T in-kernel).
     Out: local real [b, c, nx/P, ny, nz, nt].
     """
     nx, ny, nz, nt = grid
-    # S_x^T, F_x^T
-    xf = pad_full(xf, XDIM, nx)
-    xf = jnp.fft.ifft(xf, axis=XDIM)
-    # R_{x->y}^T = R_{y->x}
-    xf = repartition(xf, src=YDIM, dst=XDIM, axis_name=axis_name)
-    # S_{yzt}^T, F_{yzt}^T
-    xf = pad_full(xf, YDIM, ny)
-    xf = pad_full(xf, ZDIM, nz)
-    xf = pad_rfft(xf, TDIM, nt // 2 + 1)
-    xf = jnp.fft.ifft(xf, axis=YDIM)
-    xf = jnp.fft.ifft(xf, axis=ZDIM)
-    y = jnp.fft.irfft(xf, n=nt, axis=TDIM)
-    return y.astype(out_dtype)
+
+    def body(xf):
+        # S_x^T, F_x^T
+        if pad_x:
+            xf_ = pad_full(xf, XDIM, nx)
+        else:
+            xf_ = xf
+        xf_ = jnp.fft.ifft(xf_, axis=XDIM)
+        # R_{x->y}^T = R_{y->x}
+        xf_ = repartition(xf_, src=YDIM, dst=XDIM, axis_name=axis_name)
+        # S_{yzt}^T, F_{yzt}^T
+        xf_ = pad_full(xf_, YDIM, ny)
+        xf_ = pad_full(xf_, ZDIM, nz)
+        xf_ = pad_rfft(xf_, TDIM, nt // 2 + 1)
+        xf_ = jnp.fft.ifft(xf_, axis=YDIM)
+        xf_ = jnp.fft.ifft(xf_, axis=ZDIM)
+        y = jnp.fft.irfft(xf_, n=nt, axis=TDIM)
+        return y.astype(out_dtype)
+
+    return _chunk_channels(body, xf, comm_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -195,20 +260,30 @@ def dist_adjoint(
 # ---------------------------------------------------------------------------
 
 def dist_forward_eager(
-    x: jax.Array, modes: Sequence[int], axis_name: str
+    x: jax.Array,
+    modes: Sequence[int],
+    axis_name: str,
+    *,
+    trunc_x: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
     """Like dist_forward, with per-dim eager truncation."""
     mx, my, mz, mt = modes
-    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
-    xf = truncate_rfft(xf, TDIM, mt)            # 33 -> mt bins before z/y FFTs
-    xf = jnp.fft.fft(xf, axis=ZDIM)
-    xf = truncate_full(xf, ZDIM, mz)
-    xf = jnp.fft.fft(xf, axis=YDIM)
-    xf = truncate_full(xf, YDIM, my)
-    xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=axis_name)
-    xf = jnp.fft.fft(xf, axis=XDIM)
-    xf = truncate_full(xf, XDIM, mx)
-    return xf
+
+    def body(x):
+        xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
+        xf = truncate_rfft(xf, TDIM, mt)        # 33 -> mt bins before z/y FFTs
+        xf = jnp.fft.fft(xf, axis=ZDIM)
+        xf = truncate_full(xf, ZDIM, mz)
+        xf = jnp.fft.fft(xf, axis=YDIM)
+        xf = truncate_full(xf, YDIM, my)
+        xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=axis_name)
+        xf = jnp.fft.fft(xf, axis=XDIM)
+        if trunc_x:
+            xf = truncate_full(xf, XDIM, mx)
+        return xf
+
+    return _chunk_channels(body, x, comm_chunks)
 
 
 def dist_adjoint_eager(
@@ -216,20 +291,27 @@ def dist_adjoint_eager(
     grid: Sequence[int],
     axis_name: str,
     out_dtype=jnp.float32,
+    *,
+    pad_x: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
     """Adjoint of the eager schedule: inverse FFTs run while the OTHER dims
     are still truncated; each pad happens right before its own iFFT."""
     nx, ny, nz, nt = grid
-    xf = pad_full(xf, XDIM, nx)
-    xf = jnp.fft.ifft(xf, axis=XDIM)
-    xf = repartition(xf, src=YDIM, dst=XDIM, axis_name=axis_name)
-    xf = pad_full(xf, YDIM, ny)
-    xf = jnp.fft.ifft(xf, axis=YDIM)
-    xf = pad_full(xf, ZDIM, nz)
-    xf = jnp.fft.ifft(xf, axis=ZDIM)
-    xf = pad_rfft(xf, TDIM, nt // 2 + 1)
-    y = jnp.fft.irfft(xf, n=nt, axis=TDIM)
-    return y.astype(out_dtype)
+
+    def body(xf):
+        xf_ = pad_full(xf, XDIM, nx) if pad_x else xf
+        xf_ = jnp.fft.ifft(xf_, axis=XDIM)
+        xf_ = repartition(xf_, src=YDIM, dst=XDIM, axis_name=axis_name)
+        xf_ = pad_full(xf_, YDIM, ny)
+        xf_ = jnp.fft.ifft(xf_, axis=YDIM)
+        xf_ = pad_full(xf_, ZDIM, nz)
+        xf_ = jnp.fft.ifft(xf_, axis=ZDIM)
+        xf_ = pad_rfft(xf_, TDIM, nt // 2 + 1)
+        y = jnp.fft.irfft(xf_, n=nt, axis=TDIM)
+        return y.astype(out_dtype)
+
+    return _chunk_channels(body, xf, comm_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +337,12 @@ def dist_adjoint_eager(
 # ---------------------------------------------------------------------------
 
 def dist_forward_2d(
-    x: jax.Array, modes: Sequence[int], axis_names: Tuple[str, str] = ("mx", "my")
+    x: jax.Array,
+    modes: Sequence[int],
+    axis_names: Tuple[str, str] = ("mx", "my"),
+    *,
+    trunc_x: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
     """Pencil-decomposed forward transform (call inside shard_map).
 
@@ -265,20 +352,25 @@ def dist_forward_2d(
     """
     ax_x, ax_y = axis_names
     mx, my, mz, mt = modes
-    # F_{zt}, S_{zt}: both dims are unsharded on every pencil.
-    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
-    xf = jnp.fft.fft(xf, axis=ZDIM)
-    xf = truncate_full(xf, ZDIM, mz)
-    xf = truncate_rfft(xf, TDIM, mt)
-    # R^{my}_{y->z}: unshard y by sharding the (truncated) z dim.
-    xf = repartition(xf, src=YDIM, dst=ZDIM, axis_name=ax_y)
-    xf = jnp.fft.fft(xf, axis=YDIM)
-    xf = truncate_full(xf, YDIM, my)
-    # R^{mx}_{x->y}: unshard x by sharding the (truncated) y dim.
-    xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=ax_x)
-    xf = jnp.fft.fft(xf, axis=XDIM)
-    xf = truncate_full(xf, XDIM, mx)
-    return xf
+
+    def body(x):
+        # F_{zt}, S_{zt}: both dims are unsharded on every pencil.
+        xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
+        xf = jnp.fft.fft(xf, axis=ZDIM)
+        xf = truncate_full(xf, ZDIM, mz)
+        xf = truncate_rfft(xf, TDIM, mt)
+        # R^{my}_{y->z}: unshard y by sharding the (truncated) z dim.
+        xf = repartition(xf, src=YDIM, dst=ZDIM, axis_name=ax_y)
+        xf = jnp.fft.fft(xf, axis=YDIM)
+        xf = truncate_full(xf, YDIM, my)
+        # R^{mx}_{x->y}: unshard x by sharding the (truncated) y dim.
+        xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=ax_x)
+        xf = jnp.fft.fft(xf, axis=XDIM)
+        if trunc_x:
+            xf = truncate_full(xf, XDIM, mx)
+        return xf
+
+    return _chunk_channels(body, x, comm_chunks)
 
 
 def dist_adjoint_2d(
@@ -286,6 +378,9 @@ def dist_adjoint_2d(
     grid: Sequence[int],
     axis_names: Tuple[str, str] = ("mx", "my"),
     out_dtype=jnp.float32,
+    *,
+    pad_x: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
     """Adjoint of ``dist_forward_2d`` (each R^T is the reverse all-to-all).
 
@@ -294,38 +389,52 @@ def dist_adjoint_2d(
     """
     ax_x, ax_y = axis_names
     nx, ny, nz, nt = grid
-    xf = pad_full(xf, XDIM, nx)
-    xf = jnp.fft.ifft(xf, axis=XDIM)
-    xf = repartition(xf, src=YDIM, dst=XDIM, axis_name=ax_x)
-    xf = pad_full(xf, YDIM, ny)
-    xf = jnp.fft.ifft(xf, axis=YDIM)
-    xf = repartition(xf, src=ZDIM, dst=YDIM, axis_name=ax_y)
-    xf = pad_full(xf, ZDIM, nz)
-    xf = pad_rfft(xf, TDIM, nt // 2 + 1)
-    xf = jnp.fft.ifft(xf, axis=ZDIM)
-    y = jnp.fft.irfft(xf, n=nt, axis=TDIM)
-    return y.astype(out_dtype)
+
+    def body(xf):
+        xf_ = pad_full(xf, XDIM, nx) if pad_x else xf
+        xf_ = jnp.fft.ifft(xf_, axis=XDIM)
+        xf_ = repartition(xf_, src=YDIM, dst=XDIM, axis_name=ax_x)
+        xf_ = pad_full(xf_, YDIM, ny)
+        xf_ = jnp.fft.ifft(xf_, axis=YDIM)
+        xf_ = repartition(xf_, src=ZDIM, dst=YDIM, axis_name=ax_y)
+        xf_ = pad_full(xf_, ZDIM, nz)
+        xf_ = pad_rfft(xf_, TDIM, nt // 2 + 1)
+        xf_ = jnp.fft.ifft(xf_, axis=ZDIM)
+        y = jnp.fft.irfft(xf_, n=nt, axis=TDIM)
+        return y.astype(out_dtype)
+
+    return _chunk_channels(body, xf, comm_chunks)
 
 
 def dist_forward_2d_eager(
-    x: jax.Array, modes: Sequence[int], axis_names: Tuple[str, str] = ("mx", "my")
+    x: jax.Array,
+    modes: Sequence[int],
+    axis_names: Tuple[str, str] = ("mx", "my"),
+    *,
+    trunc_x: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
     """2-D pencil forward with per-dim eager truncation: t is truncated
     before the z FFT, so the z FFT runs on an mt-deep tensor (same flop
     saving as the 1-D eager schedule; bit-equivalent to dist_forward_2d)."""
     ax_x, ax_y = axis_names
     mx, my, mz, mt = modes
-    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
-    xf = truncate_rfft(xf, TDIM, mt)
-    xf = jnp.fft.fft(xf, axis=ZDIM)
-    xf = truncate_full(xf, ZDIM, mz)
-    xf = repartition(xf, src=YDIM, dst=ZDIM, axis_name=ax_y)
-    xf = jnp.fft.fft(xf, axis=YDIM)
-    xf = truncate_full(xf, YDIM, my)
-    xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=ax_x)
-    xf = jnp.fft.fft(xf, axis=XDIM)
-    xf = truncate_full(xf, XDIM, mx)
-    return xf
+
+    def body(x):
+        xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
+        xf = truncate_rfft(xf, TDIM, mt)
+        xf = jnp.fft.fft(xf, axis=ZDIM)
+        xf = truncate_full(xf, ZDIM, mz)
+        xf = repartition(xf, src=YDIM, dst=ZDIM, axis_name=ax_y)
+        xf = jnp.fft.fft(xf, axis=YDIM)
+        xf = truncate_full(xf, YDIM, my)
+        xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=ax_x)
+        xf = jnp.fft.fft(xf, axis=XDIM)
+        if trunc_x:
+            xf = truncate_full(xf, XDIM, mx)
+        return xf
+
+    return _chunk_channels(body, x, comm_chunks)
 
 
 def dist_adjoint_2d_eager(
@@ -333,22 +442,29 @@ def dist_adjoint_2d_eager(
     grid: Sequence[int],
     axis_names: Tuple[str, str] = ("mx", "my"),
     out_dtype=jnp.float32,
+    *,
+    pad_x: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
     """Adjoint of the eager 2-D schedule: each pad happens right before its
     own iFFT, so earlier iFFTs run on still-truncated tensors."""
     ax_x, ax_y = axis_names
     nx, ny, nz, nt = grid
-    xf = pad_full(xf, XDIM, nx)
-    xf = jnp.fft.ifft(xf, axis=XDIM)
-    xf = repartition(xf, src=YDIM, dst=XDIM, axis_name=ax_x)
-    xf = pad_full(xf, YDIM, ny)
-    xf = jnp.fft.ifft(xf, axis=YDIM)
-    xf = repartition(xf, src=ZDIM, dst=YDIM, axis_name=ax_y)
-    xf = pad_full(xf, ZDIM, nz)
-    xf = jnp.fft.ifft(xf, axis=ZDIM)
-    xf = pad_rfft(xf, TDIM, nt // 2 + 1)
-    y = jnp.fft.irfft(xf, n=nt, axis=TDIM)
-    return y.astype(out_dtype)
+
+    def body(xf):
+        xf_ = pad_full(xf, XDIM, nx) if pad_x else xf
+        xf_ = jnp.fft.ifft(xf_, axis=XDIM)
+        xf_ = repartition(xf_, src=YDIM, dst=XDIM, axis_name=ax_x)
+        xf_ = pad_full(xf_, YDIM, ny)
+        xf_ = jnp.fft.ifft(xf_, axis=YDIM)
+        xf_ = repartition(xf_, src=ZDIM, dst=YDIM, axis_name=ax_y)
+        xf_ = pad_full(xf_, ZDIM, nz)
+        xf_ = jnp.fft.ifft(xf_, axis=ZDIM)
+        xf_ = pad_rfft(xf_, TDIM, nt // 2 + 1)
+        y = jnp.fft.irfft(xf_, n=nt, axis=TDIM)
+        return y.astype(out_dtype)
+
+    return _chunk_channels(body, xf, comm_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -358,21 +474,39 @@ def dist_adjoint_2d_eager(
 # ---------------------------------------------------------------------------
 
 def dist_forward_untruncated(
-    x: jax.Array, modes: Sequence[int], axis_name: str
+    x: jax.Array,
+    modes: Sequence[int],
+    axis_name: str,
+    *,
+    trunc_xzt: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
-    """[31]-style forward: F_{yzt}, R_{x->y} (full tensor!), F_x, then S."""
+    """[31]-style forward: F_{yzt}, R_{x->y} (full tensor!), F_x, then S.
+
+    ``trunc_xzt=False`` leaves x/z/t untruncated for the fused Pallas
+    kernel; the sharded y dim is still truncated here (truncate_y_local
+    needs the collective, and truncation along y commutes with the
+    later in-kernel x/z/t truncation).
+    """
     mx, my, mz, mt = modes
-    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
-    xf = jnp.fft.fft(xf, axis=YDIM)
-    xf = jnp.fft.fft(xf, axis=ZDIM)
-    xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=axis_name)
-    xf = jnp.fft.fft(xf, axis=XDIM)
-    # Truncate only now (after communication).
-    xf = truncate_full(xf, XDIM, mx)
-    xf = truncate_y_local(xf, my, axis_name)
-    xf = truncate_full(xf, ZDIM, mz)
-    xf = truncate_rfft(xf, TDIM, mt)
-    return xf
+
+    def body(x):
+        xf = jnp.fft.rfft(x.astype(jnp.float32), axis=TDIM)
+        xf = jnp.fft.fft(xf, axis=YDIM)
+        xf = jnp.fft.fft(xf, axis=ZDIM)
+        xf = repartition(xf, src=XDIM, dst=YDIM, axis_name=axis_name)
+        xf = jnp.fft.fft(xf, axis=XDIM)
+        # Truncate only now (after communication).
+        if trunc_xzt:
+            xf = truncate_full(xf, XDIM, mx)   # before the y gather: less data
+            xf = truncate_y_local(xf, my, axis_name)
+            xf = truncate_full(xf, ZDIM, mz)
+            xf = truncate_rfft(xf, TDIM, mt)
+        else:
+            xf = truncate_y_local(xf, my, axis_name)
+        return xf
+
+    return _chunk_channels(body, x, comm_chunks)
 
 
 def truncate_y_local(xf: jax.Array, my: int, axis_name: str) -> jax.Array:
@@ -406,16 +540,31 @@ def dist_adjoint_untruncated(
     grid: Sequence[int],
     axis_name: str,
     out_dtype=jnp.float32,
+    *,
+    pad_xzt: bool = True,
+    comm_chunks: int = 1,
 ) -> jax.Array:
-    """[31]-style inverse: pad everything first, repartition the FULL tensor."""
+    """[31]-style inverse: pad everything first, repartition the FULL tensor.
+
+    ``pad_xzt=False`` means x/z/t arrive already full-size (the fused
+    kernel zero-filled them); only the sharded y dim still needs its
+    collective pad.
+    """
     nx, ny, nz, nt = grid
-    xf = pad_full(xf, XDIM, nx)
-    xf = pad_y_local(xf, ny, axis_name)
-    xf = pad_full(xf, ZDIM, nz)
-    xf = pad_rfft(xf, TDIM, nt // 2 + 1)
-    xf = jnp.fft.ifft(xf, axis=XDIM)
-    xf = repartition(xf, src=YDIM, dst=XDIM, axis_name=axis_name)
-    xf = jnp.fft.ifft(xf, axis=YDIM)
-    xf = jnp.fft.ifft(xf, axis=ZDIM)
-    y = jnp.fft.irfft(xf, n=nt, axis=TDIM)
-    return y.astype(out_dtype)
+
+    def body(xf):
+        if pad_xzt:
+            xf_ = pad_full(xf, XDIM, nx)
+            xf_ = pad_y_local(xf_, ny, axis_name)
+            xf_ = pad_full(xf_, ZDIM, nz)
+            xf_ = pad_rfft(xf_, TDIM, nt // 2 + 1)
+        else:
+            xf_ = pad_y_local(xf, ny, axis_name)
+        xf_ = jnp.fft.ifft(xf_, axis=XDIM)
+        xf_ = repartition(xf_, src=YDIM, dst=XDIM, axis_name=axis_name)
+        xf_ = jnp.fft.ifft(xf_, axis=YDIM)
+        xf_ = jnp.fft.ifft(xf_, axis=ZDIM)
+        y = jnp.fft.irfft(xf_, n=nt, axis=TDIM)
+        return y.astype(out_dtype)
+
+    return _chunk_channels(body, xf, comm_chunks)

@@ -24,7 +24,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.common import compat
 from repro.core import dfft
 from repro.core.dfft import BDIM, CDIM, XDIM, YDIM, ZDIM, TDIM
-from repro.kernels.spectral_conv import spectral_apply
+from repro.kernels.spectral_conv import (
+    cached_weight_planes,
+    spectral_apply,
+    spectral_apply_fused,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,7 +42,14 @@ class FNOConfig:
     decoder_dim: int = 128
     # Compute dtype for pointwise/conv ops; the FFT path is always f32.
     dtype: jnp.dtype = jnp.float32
-    use_pallas: bool = False  # route spectral conv through the Pallas kernel
+    # Route the spectral conv through the fused Pallas kernel (truncate +
+    # complex channel-mix + pad in one HBM pass); equivalence-gated against
+    # the unfused path in tests/distributed_checks.py.
+    use_pallas: bool = False
+    # Channel-chunk the distributed FFT pipelines so each chunk's
+    # all-to-all overlaps the next chunk's local FFTs (bit-identical; >1
+    # only helps under a latency-hiding scheduler, see launch.devices).
+    comm_chunks: int = 1
     remat: bool = True        # checkpoint each FNO block (A100-80GB -> v5e-16GB)
 
     @property
@@ -114,7 +125,7 @@ def init_params(key: jax.Array, cfg: FNOConfig) -> dict:
     }
 
 
-def param_specs(mesh: Mesh, model_axis="model") -> dict:
+def param_specs(mesh: Mesh, model_axis="model", *, planes: bool = False) -> dict:
     """PartitionSpecs: spectral weights sharded along k_y (paper Alg. 2);
     encoder/decoder/bypass replicated (the paper's broadcast B).
 
@@ -122,6 +133,11 @@ def param_specs(mesh: Mesh, model_axis="model") -> dict:
     (2-D pencil: shard k_y by the x-mesh axis and k_z by the y-mesh axis —
     the dims each shard lands on after the pencil forward's repartitions),
     or None (pure data parallelism: everything replicated).
+
+    ``planes=True`` describes the plane-cached params tree
+    (``params_with_planes``): ``w_spec`` replaced by float32
+    ``w_spec_re``/``w_spec_im`` leaves. The planes keep the mode dims
+    unflattened, so they take the SAME spec as the complex original.
     """
     del mesh
     if model_axis is None:
@@ -132,15 +148,60 @@ def param_specs(mesh: Mesh, model_axis="model") -> dict:
     else:
         # [n_blocks, ci, co, kx, ky, kz, kt] -> shard ky
         w_spec = P(None, None, None, None, model_axis, None, None)
+    if planes:
+        spec_leaves = {"w_spec_re": w_spec, "w_spec_im": w_spec}
+    else:
+        spec_leaves = {"w_spec": w_spec}
     return {
         "encoder": {"w": P(), "b": P()},
         "blocks": {
-            "w_spec": w_spec,
+            **spec_leaves,
             "w_bypass": P(),
             "b_bypass": P(),
         },
         "decoder": {"w1": P(), "b1": P(), "w2": P(), "b2": P()},
     }
+
+
+def params_with_planes(params: dict) -> dict:
+    """Replace the complex ``w_spec`` with cached float32 re/im planes.
+
+    For frozen params (serving): the re/im split the Pallas kernels need
+    is computed ONCE per checkpoint (via the weight-plane cache) instead
+    of once per block per rollout step, and the complex original is
+    dropped from the tree so device memory is not doubled. The planes
+    shard with the same PartitionSpecs (``param_specs(..., planes=True)``).
+    """
+    blocks = dict(params["blocks"])
+    if "w_spec" not in blocks:
+        return params
+    w = blocks.pop("w_spec")
+    wr, wi = cached_weight_planes(w)
+    blocks["w_spec_re"] = wr
+    blocks["w_spec_im"] = wi
+    return {**params, "blocks": blocks}
+
+
+def params_without_planes(params: dict) -> dict:
+    """Inverse of ``params_with_planes``: recombine planes to complex
+    ``w_spec`` (used by the serving --verify oracle, which replays through
+    the plain serial forward)."""
+    blocks = dict(params["blocks"])
+    if "w_spec" in blocks:
+        return params
+    wr = blocks.pop("w_spec_re")
+    wi = blocks.pop("w_spec_im")
+    blocks["w_spec"] = wr + 1j * wi
+    return {**params, "blocks": blocks}
+
+
+def _block_weights(blk: dict):
+    """Per-block spectral weights from a scan slice of params['blocks']:
+    the complex ``w_spec`` or, for plane-cached params, the (re, im)
+    tuple both ``spectral_apply`` and ``spectral_apply_fused`` accept."""
+    if "w_spec" in blk:
+        return blk["w_spec"]
+    return (blk["w_spec_re"], blk["w_spec_im"])
 
 
 def _conv1x1(x: jax.Array, w: jax.Array, b: Optional[jax.Array]) -> jax.Array:
@@ -200,10 +261,21 @@ def _bypass(x, w_b, b_b):
 # ---------------------------------------------------------------------------
 
 def fno_block(x, w_spec, w_b, b_b, cfg: FNOConfig):
-    """Serial FNO block: irfftn(pad(W . trunc(rfftn(x)))) + bypass, GELU."""
-    xf = dfft.serial_forward(x, cfg.modes)
-    yf = spectral_apply(xf, w_spec, use_pallas=cfg.use_pallas)
-    y = dfft.serial_adjoint(yf, cfg.grid, out_dtype=cfg.dtype)
+    """Serial FNO block: irfftn(pad(W . trunc(rfftn(x)))) + bypass, GELU.
+
+    With ``use_pallas`` the S / W· / S^T epilogue happens inside the fused
+    kernel, so the FFT layer neither truncates nor pads — the mode tensor
+    crosses HBM once instead of four times.
+    """
+    if cfg.use_pallas:
+        nx, ny, nz, nt = cfg.grid
+        xf = dfft.serial_forward(x, cfg.modes, truncate=False)
+        yf = spectral_apply_fused(xf, w_spec, (nx, ny, nz), t_out=nt // 2 + 1)
+        y = dfft.serial_adjoint(yf, cfg.grid, out_dtype=cfg.dtype, pre_padded=True)
+    else:
+        xf = dfft.serial_forward(x, cfg.modes)
+        yf = spectral_apply(xf, w_spec, use_pallas=False)
+        y = dfft.serial_adjoint(yf, cfg.grid, out_dtype=cfg.dtype)
     return jax.nn.gelu(y + _bypass(x, w_b, b_b))
 
 
@@ -225,7 +297,7 @@ def fno_forward(params: dict, x: jax.Array, cfg: FNOConfig) -> jax.Array:
     h = _encoder(params, x, cfg)
     return _run_blocks(
         params, h, cfg,
-        lambda h, blk: fno_block(h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg),
+        lambda h, blk: fno_block(h, _block_weights(blk), blk["w_bypass"], blk["b_bypass"], cfg),
     )
 
 
@@ -248,7 +320,7 @@ def fno_forward_split(
     h = _encoder_from_prelift(params, pre, cfg)
     return _run_blocks(
         params, h, cfg,
-        lambda h, blk: fno_block(h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg),
+        lambda h, blk: fno_block(h, _block_weights(blk), blk["w_bypass"], blk["b_bypass"], cfg),
     )
 
 
@@ -261,43 +333,126 @@ def fno_forward_split(
 
 def fno_block_dist(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
     """Paper Alg. 2: local F/S over yzt, R_{x->y}, F/S over x, local spectral
-    multiply (weights pre-sharded along k_y), adjoint path back."""
-    xf = dfft.dist_forward(x, cfg.modes, axis_name)
-    yf = spectral_apply(xf, w_spec, use_pallas=cfg.use_pallas)
-    y = dfft.dist_adjoint(yf, cfg.grid, axis_name, out_dtype=cfg.dtype)
+    multiply (weights pre-sharded along k_y), adjoint path back.
+
+    Fused path: y/z/t are truncated before the repartition as always (the
+    paper's comm optimization), but S_x / S_x^T move into the kernel —
+    the only dims still full-size at the kernel are the post-repartition
+    x extent, exactly the three extra HBM passes the fusion removes.
+    """
+    if cfg.use_pallas:
+        xf = dfft.dist_forward(
+            x, cfg.modes, axis_name, trunc_x=False, comm_chunks=cfg.comm_chunks
+        )
+        yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        y = dfft.dist_adjoint(
+            yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
+            pad_x=False, comm_chunks=cfg.comm_chunks,
+        )
+    else:
+        xf = dfft.dist_forward(x, cfg.modes, axis_name, comm_chunks=cfg.comm_chunks)
+        yf = spectral_apply(xf, w_spec, use_pallas=False)
+        y = dfft.dist_adjoint(
+            yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
+            comm_chunks=cfg.comm_chunks,
+        )
     return jax.nn.gelu(y + _bypass(x, w_b, b_b))
 
 
 def fno_block_dist_31(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
     """Grady et al. [31] schedule: repartition the UNtruncated spectrum."""
-    xf = dfft.dist_forward_untruncated(x, cfg.modes, axis_name)
-    yf = spectral_apply(xf, w_spec, use_pallas=cfg.use_pallas)
-    y = dfft.dist_adjoint_untruncated(yf, cfg.grid, axis_name, out_dtype=cfg.dtype)
+    nx, ny, nz, nt = cfg.grid
+    if cfg.use_pallas:
+        xf = dfft.dist_forward_untruncated(
+            x, cfg.modes, axis_name, trunc_xzt=False,
+            comm_chunks=cfg.comm_chunks,
+        )
+        yf = spectral_apply_fused(
+            xf, w_spec, (nx, None, nz), t_out=nt // 2 + 1
+        )
+        y = dfft.dist_adjoint_untruncated(
+            yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
+            pad_xzt=False, comm_chunks=cfg.comm_chunks,
+        )
+    else:
+        xf = dfft.dist_forward_untruncated(
+            x, cfg.modes, axis_name, comm_chunks=cfg.comm_chunks
+        )
+        yf = spectral_apply(xf, w_spec, use_pallas=False)
+        y = dfft.dist_adjoint_untruncated(
+            yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
+            comm_chunks=cfg.comm_chunks,
+        )
     return jax.nn.gelu(y + _bypass(x, w_b, b_b))
 
 
 def fno_block_dist_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
     """Beyond-paper: per-dim eager truncation (bit-equivalent, cheaper FFTs)."""
-    xf = dfft.dist_forward_eager(x, cfg.modes, axis_name)
-    yf = spectral_apply(xf, w_spec, use_pallas=cfg.use_pallas)
-    y = dfft.dist_adjoint_eager(yf, cfg.grid, axis_name, out_dtype=cfg.dtype)
+    if cfg.use_pallas:
+        xf = dfft.dist_forward_eager(
+            x, cfg.modes, axis_name, trunc_x=False, comm_chunks=cfg.comm_chunks
+        )
+        yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        y = dfft.dist_adjoint_eager(
+            yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
+            pad_x=False, comm_chunks=cfg.comm_chunks,
+        )
+    else:
+        xf = dfft.dist_forward_eager(
+            x, cfg.modes, axis_name, comm_chunks=cfg.comm_chunks
+        )
+        yf = spectral_apply(xf, w_spec, use_pallas=False)
+        y = dfft.dist_adjoint_eager(
+            yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
+            comm_chunks=cfg.comm_chunks,
+        )
     return jax.nn.gelu(y + _bypass(x, w_b, b_b))
 
 
 def fno_block_dist_2d(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names):
     """2-D pencil block: x sharded along both x and y, spectral weights
     sharded along k_y x k_z (matching dist_forward_2d's output layout)."""
-    xf = dfft.dist_forward_2d(x, cfg.modes, axis_names)
-    yf = spectral_apply(xf, w_spec, use_pallas=cfg.use_pallas)
-    y = dfft.dist_adjoint_2d(yf, cfg.grid, axis_names, out_dtype=cfg.dtype)
+    if cfg.use_pallas:
+        xf = dfft.dist_forward_2d(
+            x, cfg.modes, axis_names, trunc_x=False, comm_chunks=cfg.comm_chunks
+        )
+        yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        y = dfft.dist_adjoint_2d(
+            yf, cfg.grid, axis_names, out_dtype=cfg.dtype,
+            pad_x=False, comm_chunks=cfg.comm_chunks,
+        )
+    else:
+        xf = dfft.dist_forward_2d(
+            x, cfg.modes, axis_names, comm_chunks=cfg.comm_chunks
+        )
+        yf = spectral_apply(xf, w_spec, use_pallas=False)
+        y = dfft.dist_adjoint_2d(
+            yf, cfg.grid, axis_names, out_dtype=cfg.dtype,
+            comm_chunks=cfg.comm_chunks,
+        )
     return jax.nn.gelu(y + _bypass(x, w_b, b_b))
 
 
 def fno_block_dist_2d_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names):
     """2-D pencil block with per-dim eager truncation."""
-    xf = dfft.dist_forward_2d_eager(x, cfg.modes, axis_names)
-    yf = spectral_apply(xf, w_spec, use_pallas=cfg.use_pallas)
-    y = dfft.dist_adjoint_2d_eager(yf, cfg.grid, axis_names, out_dtype=cfg.dtype)
+    if cfg.use_pallas:
+        xf = dfft.dist_forward_2d_eager(
+            x, cfg.modes, axis_names, trunc_x=False, comm_chunks=cfg.comm_chunks
+        )
+        yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        y = dfft.dist_adjoint_2d_eager(
+            yf, cfg.grid, axis_names, out_dtype=cfg.dtype,
+            pad_x=False, comm_chunks=cfg.comm_chunks,
+        )
+    else:
+        xf = dfft.dist_forward_2d_eager(
+            x, cfg.modes, axis_names, comm_chunks=cfg.comm_chunks
+        )
+        yf = spectral_apply(xf, w_spec, use_pallas=False)
+        y = dfft.dist_adjoint_2d_eager(
+            yf, cfg.grid, axis_names, out_dtype=cfg.dtype,
+            comm_chunks=cfg.comm_chunks,
+        )
     return jax.nn.gelu(y + _bypass(x, w_b, b_b))
 
 
@@ -309,7 +464,7 @@ def _fno_forward_dist_impl(params, x, cfg, axis_name, block_fn):
     return _run_blocks(
         params, h, cfg,
         lambda h, blk: block_fn(
-            h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg, axis_name
+            h, _block_weights(blk), blk["w_bypass"], blk["b_bypass"], cfg, axis_name
         ),
     )
 
@@ -325,7 +480,7 @@ def _fno_forward_dist_split_impl(params, pre_static, x_dyn, cfg, n_static, axis_
     return _run_blocks(
         params, h, cfg,
         lambda h, blk: block_fn(
-            h, blk["w_spec"], blk["w_bypass"], blk["b_bypass"], cfg, axis_name
+            h, _block_weights(blk), blk["w_bypass"], blk["b_bypass"], cfg, axis_name
         ),
     )
 
@@ -396,6 +551,7 @@ def make_dist_forward(
     dp_axes=("data",),
     model_axis="model",
     variant: str = "paper",
+    planes: bool = False,
 ):
     """Build the shard_map'd distributed forward for a mesh.
 
@@ -406,6 +562,9 @@ def make_dist_forward(
 
     variant: "paper" (truncate-then-repartition), "grady31" (the [31]
     baseline, 1-D only), or "eager" (beyond-paper per-dim truncation).
+
+    ``planes=True``: the params tree carries plane-cached spectral weights
+    (``params_with_planes``) — the shard_map in_specs must match that tree.
     """
     if isinstance(model_axis, (tuple, list)):
         model_axes = tuple(model_axis)
@@ -419,7 +578,7 @@ def make_dist_forward(
             )
         fwd = _VARIANTS_2D[variant]
         x_spec = input_spec(dp_axes, model_axes)
-        p_specs = param_specs(mesh, model_axes)
+        p_specs = param_specs(mesh, model_axes, planes=planes)
 
         def shard_fwd(params, x):
             return fwd(params, x, cfg, model_axes)
@@ -428,7 +587,7 @@ def make_dist_forward(
         cfg.validate_for_parallelism(mesh.shape[model_axis])
         fwd = _VARIANTS[variant]
         x_spec = input_spec(dp_axes, model_axis)
-        p_specs = param_specs(mesh, model_axis)
+        p_specs = param_specs(mesh, model_axis, planes=planes)
 
         def shard_fwd(params, x):
             return fwd(params, x, cfg, model_axis)
@@ -446,6 +605,7 @@ def make_dist_forward_split(
     dp_axes=("data",),
     model_axis="model",
     variant: str = "paper",
+    planes: bool = False,
 ):
     """shard_map'd distributed forward taking (params, pre_static, x_dyn).
 
@@ -465,12 +625,12 @@ def make_dist_forward_split(
             )
         block_fn, axis = _BLOCKS_2D[variant], model_axes
         x_spec = input_spec(dp_axes, model_axes)
-        p_specs = param_specs(mesh, model_axes)
+        p_specs = param_specs(mesh, model_axes, planes=planes)
     else:
         cfg.validate_for_parallelism(mesh.shape[model_axis])
         block_fn, axis = _BLOCKS[variant], model_axis
         x_spec = input_spec(dp_axes, model_axis)
-        p_specs = param_specs(mesh, model_axis)
+        p_specs = param_specs(mesh, model_axis, planes=planes)
 
     def shard_fwd(params, pre_static, x_dyn):
         return _fno_forward_dist_split_impl(
@@ -490,6 +650,7 @@ def split_forward_and_specs(
     dp_axes=("data",),
     model_axis=None,
     variant: str = "paper",
+    planes: bool = False,
 ):
     """``forward_and_specs`` for the split encoder: the returned
     ``forward(params, pre_static, x_dyn)`` consumes a precomputed (cached)
@@ -498,14 +659,14 @@ def split_forward_and_specs(
     ``x_spec`` serves both operands.
     """
     x_spec = input_spec(dp_axes, model_axis)
-    p_specs = param_specs(mesh, model_axis)
+    p_specs = param_specs(mesh, model_axis, planes=planes)
     if model_axis is None:
         def forward(params, pre_static, x_dyn):
             return fno_forward_split(params, pre_static, x_dyn, cfg, n_static)
     else:
         forward = make_dist_forward_split(
             mesh, cfg, n_static, dp_axes=dp_axes, model_axis=model_axis,
-            variant=variant,
+            variant=variant, planes=planes,
         )
     return forward, x_spec, p_specs
 
@@ -517,6 +678,7 @@ def forward_and_specs(
     dp_axes=("data",),
     model_axis=None,
     variant: str = "paper",
+    planes: bool = False,
 ):
     """(forward, x_spec, p_specs) for a mesh: the single source of truth for
     how an FNO batch and its params are laid out, shared by the training
@@ -527,15 +689,19 @@ def forward_and_specs(
     params replicated, batch sharded over ``dp_axes``); a mesh-axis name or
     a pair of names returns the shard_map'd distributed forward (paper
     Alg. 2 / 2-D pencils). ``forward(params, x)`` in all cases.
+
+    ``planes=True``: specs and shard_map layouts for a plane-cached params
+    tree (``params_with_planes``, serving only).
     """
     x_spec = input_spec(dp_axes, model_axis)
-    p_specs = param_specs(mesh, model_axis)
+    p_specs = param_specs(mesh, model_axis, planes=planes)
     if model_axis is None:
         def forward(params, x):
             return fno_forward(params, x, cfg)
     else:
         forward = make_dist_forward(
-            mesh, cfg, dp_axes=dp_axes, model_axis=model_axis, variant=variant
+            mesh, cfg, dp_axes=dp_axes, model_axis=model_axis, variant=variant,
+            planes=planes,
         )
     return forward, x_spec, p_specs
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 from typing import Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 
 def repartition(x: jax.Array, src: int, dst: int, axis_name: str) -> jax.Array:
@@ -40,6 +41,51 @@ def repartition(x: jax.Array, src: int, dst: int, axis_name: str) -> jax.Array:
 def repartition_t(x: jax.Array, src: int, dst: int, axis_name: str) -> jax.Array:
     """Adjoint of ``repartition(., src, dst)`` = ``repartition(., dst, src)``."""
     return repartition(x, dst, src, axis_name)
+
+
+def repartition_chunked(
+    x: jax.Array,
+    src: int,
+    dst: int,
+    axis_name: str,
+    *,
+    chunks: int = 2,
+    chunk_dim: int = 1,
+) -> jax.Array:
+    """Double-buffered ``repartition``: split along ``chunk_dim`` (default
+    the channel dim of the canonical [b,c,x,y,z,t] layout), issue one
+    all-to-all per chunk, concatenate.
+
+    Bit-identical to the blocking call — all-to-all is a pure element
+    permutation that never mixes values across ``chunk_dim``, so slicing
+    first and permuting per-slice lands every element at the same place
+    with the same value. What changes is the schedule: the per-chunk
+    collectives are independent of each other, so a latency-hiding
+    scheduler (see ``launch.devices.OVERLAP_XLA_FLAGS``) can fly chunk
+    i's wire transfer while chunk i+1's producer (the local FFT work
+    feeding this repartition) is still computing — the MPI-overlap
+    recipe of Totounferoush et al., expressed at the XLA level.
+
+    ``chunks`` is clamped to the ``chunk_dim`` extent; chunk sizes may be
+    uneven (no divisibility requirement).
+    """
+    if chunk_dim in (src, dst):
+        raise ValueError(
+            f"chunk_dim {chunk_dim} must differ from src={src}/dst={dst}"
+        )
+    n = min(int(chunks), x.shape[chunk_dim])
+    if n <= 1:
+        return repartition(x, src, dst, axis_name)
+    c = x.shape[chunk_dim]
+    bounds = [round(i * c / n) for i in range(n + 1)]
+    parts = [
+        repartition(
+            jax.lax.slice_in_dim(x, lo, hi, axis=chunk_dim),
+            src, dst, axis_name,
+        )
+        for lo, hi in zip(bounds, bounds[1:])
+    ]
+    return jnp.concatenate(parts, axis=chunk_dim)
 
 
 Move = Tuple[int, int, str]  # (src_dim, dst_dim, mesh_axis_name)

@@ -1,2 +1,12 @@
-from repro.kernels.spectral_conv.ops import spectral_apply  # noqa: F401
-from repro.kernels.spectral_conv.ref import spectral_apply_ref  # noqa: F401
+from repro.kernels.spectral_conv.ops import (  # noqa: F401
+    cached_weight_planes,
+    clear_plane_cache,
+    plane_cache_stats,
+    spectral_apply,
+    spectral_apply_fused,
+    weight_planes,
+)
+from repro.kernels.spectral_conv.ref import (  # noqa: F401
+    spectral_apply_fused_ref,
+    spectral_apply_ref,
+)

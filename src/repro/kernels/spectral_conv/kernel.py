@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused complex per-mode channel mixing.
+"""Pallas TPU kernels: fused complex per-mode channel mixing.
 
 Motivation (TPU adaptation of the paper's hot spot): XLA lowers a complex
 einsum into four real einsums, each re-reading its operands from HBM. For
@@ -6,22 +6,41 @@ FNO-sized spectral weights (GBs — they dominate the model), the op is
 HBM-bandwidth-bound, so reading X and W once and doing the four real
 MXU contractions from VMEM halves the dominant W-stream traffic.
 
-Layout: modes are flattened to a leading K dim so each grid step owns a
-contiguous K-tile:
+Two kernel families live here:
 
-  x:   [K, B, CI]   (split into re/im float32 planes)
-  w:   [K, CI, CO]
-  out: [K, B, CO]
+1. The flattened-K mixing kernel (``spectral_apply_pallas`` /
+   ``spectral_dw_pallas``): modes are flattened to a leading K dim so each
+   grid step owns a contiguous K-tile:
 
-Grid: (K // block_k,). Each step does a batched complex matmul over its
-K-tile entirely in VMEM:
+     x:   [K, B, CI]   (split into re/im float32 planes)
+     w:   [K, CI, CO]
+     out: [K, B, CO]
 
-  yr = xr @ wr - xi @ wi;   yi = xr @ wi + xi @ wr
+   Grid: (K // block_k,). Each step does a batched complex matmul over its
+   K-tile entirely in VMEM (yr = xr@wr - xi@wi; yi = xr@wi + xi@wr).
+   BlockSpec tiling keeps the per-step VMEM footprint at
+   block_k * (B*CI + CI*CO + B*CO) * 4B * 2 (re+im), sized by ``block_k``
+   (default 128 -> ~4.5 MB at CI=CO=64, B=2, comfortably inside 16 MB
+   VMEM). K is zero-padded to a block_k multiple by the ops.py wrapper.
 
-BlockSpec tiling keeps the per-step VMEM footprint at
-block_k * (B*CI + CI*CO + B*CO) * 4B * 2 (re+im), sized by ``block_k``
-(default 128 -> ~4.5 MB at CI=CO=64, B=2, comfortably inside 16 MB VMEM).
-Channel dims are zero-padded to multiples of 8/128 lanes by the wrapper.
+2. The fused truncate+mix+pad kernel (``spectral_fused_pallas`` /
+   ``spectral_fused_dw_pallas``): consumes the FULL spectrum in its natural
+   [b, c, x, y, z, t] layout and fuses the FNO epilogue — mode truncation
+   (S), per-mode channel mix (W·), and zero-padding (S^T) — into one pass.
+   The unfused XLA pipeline materializes truncate -> mix -> pad as three
+   HBM round trips of the mode tensor; here the grid walks the OUTPUT
+   spatial positions (block size 1 along each to-be-truncated dim, so any
+   element offset is a legal block index and no divisibility constraint
+   arises), the weight BlockSpec gathers the matching kept-mode plane via
+   a computed index map, and non-kept rows are masked to zero in-register
+   — every operand streams from HBM exactly once. The weight planes arrive
+   UNFLATTENED (same [ci, co, kx, ky, kz, kt] layout as ``w_spec``), which
+   is what lets the ops-level weight-plane cache reuse one layout across
+   every block call and every serving step.
+
+Interpret-mode note: each grid step costs interpreter overhead (~ms), so
+keep grids small on CPU (tests use <= a few hundred steps); on TPU the
+grid is a hardware loop.
 """
 from __future__ import annotations
 
@@ -31,6 +50,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+
+def default_interpret() -> bool:
+    """Backend-sniffed interpret default: compiled on TPU, interpreter
+    elsewhere (CPU/GPU have no Pallas-TPU lowering)."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+# ---------------------------------------------------------------------------
+# Flattened-K mixing kernels (mode dims pre-truncated and flattened to K).
+# ---------------------------------------------------------------------------
 
 def _kernel(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
     xr = xr_ref[...]
@@ -47,6 +80,23 @@ def _kernel(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
     yi_ref[...] = ri + ir
 
 
+def _kernel_dw(xr_ref, xi_ref, gr_ref, gi_ref, wr_ref, wi_ref):
+    """dW of the complex mix under JAX's plain-transpose convention:
+    w_bar = x ._b g (contract batch, NO conjugation), per K row."""
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    gr = gr_ref[...]
+    gi = gi_ref[...]
+    # [k,b,ci] x [k,b,co] -> [k,ci,co] (contract b, batch k).
+    dn = (((1,), (1,)), ((0,), (0,)))
+    rr = jax.lax.dot_general(xr, gr, dn, preferred_element_type=jnp.float32)
+    ii = jax.lax.dot_general(xi, gi, dn, preferred_element_type=jnp.float32)
+    ri = jax.lax.dot_general(xr, gi, dn, preferred_element_type=jnp.float32)
+    ir = jax.lax.dot_general(xi, gr, dn, preferred_element_type=jnp.float32)
+    wr_ref[...] = rr - ii
+    wi_ref[...] = ri + ir
+
+
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def spectral_apply_pallas(
     xr: jax.Array,
@@ -55,12 +105,16 @@ def spectral_apply_pallas(
     wi: jax.Array,
     *,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Real/imag planes: xr/xi [K,B,CI]; wr/wi [K,CI,CO] -> yr/yi [K,B,CO].
 
     K must be divisible by block_k (the ops.py wrapper pads).
+    ``interpret=None`` sniffs the backend (compiled on TPU, interpreter
+    elsewhere) — a direct caller on TPU gets the real kernel, matching the
+    ops.py wrapper's default.
     """
+    interpret = _resolve_interpret(interpret)
     k, b, ci = xr.shape
     co = wr.shape[-1]
     assert k % block_k == 0, (k, block_k)
@@ -80,3 +134,241 @@ def spectral_apply_pallas(
         out_shape=out_shape,
         interpret=interpret,
     )(xr, xi, wr, wi)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def spectral_dw_pallas(
+    xr: jax.Array,
+    xi: jax.Array,
+    gr: jax.Array,
+    gi: jax.Array,
+    *,
+    block_k: int = 128,
+    interpret: bool | None = None,
+):
+    """Weight cotangent of the flattened mix: xr/xi [K,B,CI], gr/gi
+    [K,B,CO] -> wr_bar/wi_bar [K,CI,CO]. Same tiling as the forward."""
+    interpret = _resolve_interpret(interpret)
+    k, b, ci = xr.shape
+    co = gr.shape[-1]
+    assert k % block_k == 0, (k, block_k)
+    grid = (k // block_k,)
+    x_spec = pl.BlockSpec((block_k, b, ci), lambda i: (i, 0, 0))
+    g_spec = pl.BlockSpec((block_k, b, co), lambda i: (i, 0, 0))
+    w_spec = pl.BlockSpec((block_k, ci, co), lambda i: (i, 0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((k, ci, co), jnp.float32),
+        jax.ShapeDtypeStruct((k, ci, co), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _kernel_dw,
+        grid=grid,
+        in_specs=[x_spec, x_spec, g_spec, g_spec],
+        out_specs=[w_spec, w_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr, xi, gr, gi)
+
+
+# ---------------------------------------------------------------------------
+# Fused truncate + mix + pad kernels (natural [b,c,x,y,z,t] layout).
+#
+# ``trunc`` is a 3-tuple over the (x, y, z) mode dims: entry N (an int)
+# means the input dim is the FULL spectrum of size N — the kernel keeps the
+# 2m lowest-|k| modes ([:m] and [N-m:], m = K_d // 2 from the weight shape)
+# and zero-fills the rest of the output; entry None means the dim was
+# already truncated upstream (kept extent == input extent == output
+# extent). The trailing time dim is rFFT-style: the kernel always reads
+# bins [0:KT] and zero-pads the output tail up to ``t_out``.
+# ---------------------------------------------------------------------------
+
+def _validate_fused(x_shape, w_shape, trunc, t_out):
+    b, ci = x_shape[:2]
+    if w_shape[0] != ci:
+        raise ValueError(f"w ci={w_shape[0]} != x ci={ci}")
+    kt = w_shape[5]
+    if x_shape[5] < kt:
+        raise ValueError(f"x time bins {x_shape[5]} < weight kt={kt}")
+    if t_out is not None and t_out < kt:
+        raise ValueError(f"t_out={t_out} < weight kt={kt}")
+    for d in range(3):
+        e, k, n = x_shape[2 + d], w_shape[2 + d], trunc[d]
+        if n is None:
+            if e != k:
+                raise ValueError(
+                    f"dim {d}: pre-truncated input extent {e} != kept {k}"
+                )
+        else:
+            if e != n:
+                raise ValueError(f"dim {d}: input extent {e} != full size {n}")
+            if k % 2 or k < 2:
+                raise ValueError(f"dim {d}: kept extent {k} must be even >= 2")
+            if k > n:
+                raise ValueError(f"dim {d}: kept {k} > full {n}")
+
+
+def _kept_index(i, n, m, k_max):
+    """Full-spectrum position -> kept-mode index ([:m] keeps identity,
+    [n-m:] lands at [m:2m]); clamped for masked (non-kept) rows."""
+    return jnp.clip(jnp.where(i < m, i, i - (n - 2 * m)), 0, k_max - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("trunc", "t_out", "interpret"))
+def spectral_fused_pallas(
+    xr: jax.Array,
+    xi: jax.Array,
+    wr: jax.Array,
+    wi: jax.Array,
+    *,
+    trunc,
+    t_out: int | None = None,
+    interpret: bool | None = None,
+):
+    """Fused S^T · (W ·) · S: xr/xi [B,CI,E1,E2,E3,Tin] float32 planes of
+    the spectrum; wr/wi [CI,CO,K1,K2,K3,KT] planes of the kept-mode
+    weights (natural w_spec layout) -> yr/yi [B,CO,E1,E2,E3,t_out or KT].
+
+    Each grid step (one output x/y/z position) streams one [B,CI,KT] input
+    pencil and one [CI,CO,KT] weight plane, does the 4-real-matmul complex
+    mix, masks non-kept positions to zero, and writes the padded output —
+    truncate, mix and pad in a single HBM pass.
+    """
+    interpret = _resolve_interpret(interpret)
+    trunc = tuple(trunc)
+    _validate_fused(xr.shape, wr.shape, trunc, t_out)
+    b, ci = xr.shape[:2]
+    co = wr.shape[1]
+    e1, e2, e3 = xr.shape[2:5]
+    k1, k2, k3, kt = wr.shape[2:]
+    tout = kt if t_out is None else int(t_out)
+    ms = (k1 // 2, k2 // 2, k3 // 2)
+    kept_ext = (k1, k2, k3)
+
+    def w_index(i, j, k):
+        idx = []
+        for d, p in enumerate((i, j, k)):
+            if trunc[d] is None:
+                idx.append(p)
+            else:
+                idx.append(_kept_index(p, trunc[d], ms[d], kept_ext[d]))
+        return (0, 0, idx[0], idx[1], idx[2], 0)
+
+    def kern(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
+        keep = jnp.bool_(True)
+        for d in range(3):
+            if trunc[d] is not None:
+                p = pl.program_id(d)
+                keep = keep & ((p < ms[d]) | (p >= trunc[d] - ms[d]))
+        xr_ = xr_ref[...][:, :, 0, 0, 0, :]   # [B,CI,KT]
+        xi_ = xi_ref[...][:, :, 0, 0, 0, :]
+        wr_ = wr_ref[...][:, :, 0, 0, 0, :]   # [CI,CO,KT]
+        wi_ = wi_ref[...][:, :, 0, 0, 0, :]
+        # contract ci, batch t -> [KT,B,CO]
+        dn = (((1,), (0,)), ((2,), (2,)))
+        rr = jax.lax.dot_general(xr_, wr_, dn, preferred_element_type=jnp.float32)
+        ii = jax.lax.dot_general(xi_, wi_, dn, preferred_element_type=jnp.float32)
+        ri = jax.lax.dot_general(xr_, wi_, dn, preferred_element_type=jnp.float32)
+        ir = jax.lax.dot_general(xi_, wr_, dn, preferred_element_type=jnp.float32)
+        mask = jnp.where(keep, 1.0, 0.0)
+        out_r = jnp.moveaxis(rr - ii, 0, -1) * mask   # [B,CO,KT]
+        out_i = jnp.moveaxis(ri + ir, 0, -1) * mask
+        if tout > kt:  # fused S^T along t: zero tail, never materialized
+            z = jnp.zeros((b, co, tout - kt), jnp.float32)
+            out_r = jnp.concatenate([out_r, z], axis=-1)
+            out_i = jnp.concatenate([out_i, z], axis=-1)
+        yr_ref[...] = out_r[:, :, None, None, None, :]
+        yi_ref[...] = out_i[:, :, None, None, None, :]
+
+    grid = (e1, e2, e3)
+    x_spec = pl.BlockSpec((b, ci, 1, 1, 1, kt), lambda i, j, k: (0, 0, i, j, k, 0))
+    w_spec = pl.BlockSpec((ci, co, 1, 1, 1, kt), w_index)
+    y_spec = pl.BlockSpec((b, co, 1, 1, 1, tout), lambda i, j, k: (0, 0, i, j, k, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((b, co, e1, e2, e3, tout), jnp.float32),
+        jax.ShapeDtypeStruct((b, co, e1, e2, e3, tout), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[x_spec, x_spec, w_spec, w_spec],
+        out_specs=[y_spec, y_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr, xi, wr, wi)
+
+
+def _full_index(kd, n, m):
+    """Kept-mode index -> full-spectrum position (inverse of _kept_index
+    restricted to kept rows): [:m] identity, [m:2m] -> [n-m:]."""
+    return jnp.where(kd < m, kd, n - 2 * m + kd)
+
+
+@functools.partial(jax.jit, static_argnames=("trunc", "kept", "interpret"))
+def spectral_fused_dw(
+    xr: jax.Array,
+    xi: jax.Array,
+    gr: jax.Array,
+    gi: jax.Array,
+    *,
+    trunc,
+    kept,
+    interpret: bool | None = None,
+):
+    """Weight cotangent of the fused op: w_bar = S(x) ._b S(g) per kept
+    mode (plain transpose, no conjugation).
+
+    xr/xi [B,CI,E1,E2,E3,Tx], gr/gi [B,CO,E1,E2,E3,Tg] are the (possibly
+    full) spectrum planes the forward consumed/produced; ``kept`` is the
+    weight mode shape (K1,K2,K3,KT). The grid walks kept coordinates only
+    — every output element is written, so no masking or padding is needed
+    — and the x/g BlockSpec index maps gather the kept full-spectrum
+    positions ([:m] and [N-m:] for truncated dims, identity otherwise).
+    """
+    interpret = _resolve_interpret(interpret)
+    trunc = tuple(trunc)
+    k1, k2, k3, kt = kept
+    b, ci = xr.shape[:2]
+    co = gr.shape[1]
+    if xr.shape[5] < kt or gr.shape[5] < kt:
+        raise ValueError(f"time bins {xr.shape[5]}/{gr.shape[5]} < kt={kt}")
+    ms = (k1 // 2, k2 // 2, k3 // 2)
+
+    def xg_index(i, j, k):
+        idx = []
+        for d, p in enumerate((i, j, k)):
+            if trunc[d] is None:
+                idx.append(p)
+            else:
+                idx.append(_full_index(p, trunc[d], ms[d]))
+        return (0, 0, idx[0], idx[1], idx[2], 0)
+
+    def kern(xr_ref, xi_ref, gr_ref, gi_ref, wr_ref, wi_ref):
+        xr_ = xr_ref[...][:, :, 0, 0, 0, :]   # [B,CI,KT]
+        xi_ = xi_ref[...][:, :, 0, 0, 0, :]
+        gr_ = gr_ref[...][:, :, 0, 0, 0, :]   # [B,CO,KT]
+        gi_ = gi_ref[...][:, :, 0, 0, 0, :]
+        # contract b, batch t -> [KT,CI,CO]
+        dn = (((0,), (0,)), ((2,), (2,)))
+        rr = jax.lax.dot_general(xr_, gr_, dn, preferred_element_type=jnp.float32)
+        ii = jax.lax.dot_general(xi_, gi_, dn, preferred_element_type=jnp.float32)
+        ri = jax.lax.dot_general(xr_, gi_, dn, preferred_element_type=jnp.float32)
+        ir = jax.lax.dot_general(xi_, gr_, dn, preferred_element_type=jnp.float32)
+        wr_ref[...] = jnp.moveaxis(rr - ii, 0, -1)[:, :, None, None, None, :]
+        wi_ref[...] = jnp.moveaxis(ri + ir, 0, -1)[:, :, None, None, None, :]
+
+    grid = (k1, k2, k3)
+    x_spec = pl.BlockSpec((b, ci, 1, 1, 1, kt), xg_index)
+    g_spec = pl.BlockSpec((b, co, 1, 1, 1, kt), xg_index)
+    w_spec = pl.BlockSpec((ci, co, 1, 1, 1, kt), lambda i, j, k: (0, 0, i, j, k, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((ci, co, k1, k2, k3, kt), jnp.float32),
+        jax.ShapeDtypeStruct((ci, co, k1, k2, k3, kt), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[x_spec, x_spec, g_spec, g_spec],
+        out_specs=[w_spec, w_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr, xi, gr, gi)

@@ -102,10 +102,19 @@ class CollectiveStats:
     bytes_by_kind: Dict[str, float]
     count_by_kind: Dict[str, int]
     bytes_by_site: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # wire bytes issued through async ``<kind>-start`` ops: these fly on the
+    # collective stream while compute continues, so the latency-hiding
+    # scheduler can overlap them (vs. sync collectives that serialize)
+    overlapped_bytes: float = 0.0
 
     @property
     def total_bytes(self) -> float:
         return sum(self.bytes_by_kind.values())
+
+    @property
+    def overlap_fraction(self) -> float:
+        t = self.total_bytes
+        return self.overlapped_bytes / t if t else 0.0
 
     def top_sites(self, n: int = 10):
         return sorted(self.bytes_by_site.items(), key=lambda kv: -kv[1])[:n]
@@ -115,6 +124,8 @@ class CollectiveStats:
             "bytes_by_kind": dict(self.bytes_by_kind),
             "count_by_kind": dict(self.count_by_kind),
             "total_bytes": self.total_bytes,
+            "overlapped_bytes": self.overlapped_bytes,
+            "overlap_fraction": self.overlap_fraction,
             "top_sites": self.top_sites(8),
         }
 
@@ -303,12 +314,44 @@ def _split_computations_with_headers(hlo: str):
     return comps, headers
 
 
+def _tuple_elements(result: str) -> List[str]:
+    """Top-level elements of a tuple type string "(f32[8], f32[8,2])"."""
+    inner = result.strip()
+    if not (inner.startswith("(") and inner.endswith(")")):
+        return [inner]
+    inner = inner[1:-1]
+    parts, depth, start = [], 0, 0
+    for i, ch in enumerate(inner):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(inner[start:i])
+            start = i + 1
+    parts.append(inner[start:])
+    return [p for p in (p.strip() for p in parts) if p]
+
+
+def _async_result_bytes(kind: str, result: str) -> int:
+    """Payload bytes of an async ``<kind>-start``, whose result is a tuple
+    aliasing the operand alongside the eventual output (plus scalar context
+    on some backends). The ring model wants only the OUTPUT's bytes: the
+    largest element in general, the smallest for reduce-scatter (its output
+    is the scattered shard)."""
+    sizes = [b for b in (_shape_bytes(e) for e in _tuple_elements(result)) if b]
+    if not sizes:
+        return 0
+    return min(sizes) if kind == "reduce-scatter" else max(sizes)
+
+
 def collect_collectives(hlo: str, n_devices_default: int = 1) -> CollectiveStats:
     comps = _split_computations(hlo)
     mult = _multipliers(comps)
     bytes_by_kind: Dict[str, float] = defaultdict(float)
     count_by_kind: Dict[str, int] = defaultdict(int)
     bytes_by_site: Dict[str, float] = defaultdict(float)
+    overlapped = 0.0
     for cname, lines in comps.items():
         m = mult[cname]
         for line in lines:
@@ -317,14 +360,22 @@ def collect_collectives(hlo: str, n_devices_default: int = 1) -> CollectiveStats
                 continue
             kind = om.group("kind")
             if om.group("start") is None and f"{kind}-done" in line:
-                continue  # avoid double counting async done halves
-            rb = _shape_bytes(om.group("result"))
+                continue  # bytes were accounted at the -start half
+            is_async = om.group("start") is not None
+            if is_async:
+                rb = _async_result_bytes(kind, om.group("result"))
+            else:
+                rb = _shape_bytes(om.group("result"))
             g = _group_size(line, n_devices_default)
             wire = m * _wire_bytes(kind, rb, g)
             bytes_by_kind[kind] += wire
             count_by_kind[kind] += int(m)
             bytes_by_site[f"{kind}:{_site_of(line)}"] += wire
-    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind), dict(bytes_by_site))
+            if is_async:
+                overlapped += wire
+    return CollectiveStats(
+        dict(bytes_by_kind), dict(count_by_kind), dict(bytes_by_site), overlapped
+    )
 
 
 def peak_memory_bytes(memory_stats) -> int:

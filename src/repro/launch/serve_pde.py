@@ -83,18 +83,25 @@ def oracle_rollout(runner, x_raw: np.ndarray, steps: int):
     which mis-partitions the composed-FFT path on jax 0.4.x — the oracle
     must stay a genuinely single-device reference.
     """
+    import dataclasses
+
     import jax
 
     from repro.core import fno_forward
+    from repro.core.fno import params_without_planes
 
     cached = getattr(runner, "_oracle_cache", None)
     if cached is None:
         # one host gather + one jit for ALL oracle calls against this
         # runner (a fresh lambda per call would defeat the jit cache and
-        # recompile the serial FNO once per scenario)
+        # recompile the serial FNO once per scenario). The oracle is the
+        # UNFUSED serial forward on complex params: when the runner serves
+        # the fused Pallas path (plane-cached params), --verify is a true
+        # fused-vs-unfused equivalence gate, not a self-comparison.
+        oracle_cfg = dataclasses.replace(runner.cfg, use_pallas=False)
         cached = runner._oracle_cache = (
-            jax.device_get(runner.params),
-            jax.jit(lambda p, x: fno_forward(p, x, runner.cfg)),
+            params_without_planes(jax.device_get(runner.params)),
+            jax.jit(lambda p, x: fno_forward(p, x, oracle_cfg)),
         )
     params, fwd = cached
     n_static = getattr(runner, "n_static", 0)
@@ -168,6 +175,13 @@ def main():
     ap.add_argument("--reference", action="store_true",
                     help="time the numerical simulator on one scenario for "
                     "the surrogate-vs-simulator speedup")
+    ap.add_argument("--use-pallas", action="store_true", default=None,
+                    help="serve through the fused Pallas spectral path "
+                    "(plane-cached weights); default: whatever the "
+                    "checkpoint's fno_config.json recorded")
+    ap.add_argument("--comm-chunks", type=int, default=None,
+                    help="channel-chunked all-to-all overlap for the dist "
+                    "forward; default: the checkpoint's recorded value")
     args = ap.parse_args()
 
     from repro.serve import FNORunner
@@ -180,6 +194,8 @@ def main():
             max_slots=args.max_batch,
             n_static=n_static,
             cache_bytes=args.cache_bytes,
+            use_pallas=args.use_pallas,
+            comm_chunks=args.comm_chunks,
         )
     except ValueError as e:  # library error -> CLI-flag wording
         raise SystemExit(f"--devices/--model-shards/--static-channels: {e}") from None

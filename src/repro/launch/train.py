@@ -150,6 +150,8 @@ def write_fno_serving_config(ckpt_dir: str, cfg: FNOConfig, args, x_src, y_src,
         "n_blocks": cfg.n_blocks,
         "decoder_dim": cfg.decoder_dim,
         "model_shards": list(args.model_shards),
+        "use_pallas": cfg.use_pallas,
+        "comm_chunks": cfg.comm_chunks,
         "normalized": list(normalized),
         "normalizer": kind_of(x_src),
         "x_stats": stats_of(x_src),
@@ -207,6 +209,19 @@ def main():
         "solution along x (paper Alg. 2); two values PX PY use the 2-D "
         "pencil decomposition on a ('mx','my') mesh.",
     )
+    ap.add_argument(
+        "--use-pallas", action="store_true",
+        help="fno mode: fused Pallas spectral path (truncate + channel-mix "
+        "+ pad in one kernel pass; interpret mode off-TPU). Equivalence-"
+        "gated vs the unfused path; persisted into fno_config.json so "
+        "serving defaults to the same path.",
+    )
+    ap.add_argument(
+        "--comm-chunks", type=int, default=1,
+        help="fno mode: channel-chunk the distributed FFT pipelines so "
+        "each chunk's all-to-all overlaps the next chunk's FFTs "
+        "(bit-identical; needs the latency-hiding scheduler flags).",
+    )
     args = ap.parse_args()
 
     opt_cfg = AdamWConfig(
@@ -254,6 +269,8 @@ def main():
             out_channels=out_ch,
             n_blocks=4,
             decoder_dim=32,
+            use_pallas=args.use_pallas,
+            comm_chunks=args.comm_chunks,
         )
         if x_src is None:
             x_all, y_all = synthetic_fno_data(cfg, args.n_data)

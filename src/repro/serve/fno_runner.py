@@ -48,7 +48,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.fno import (
-    FNOConfig, forward_and_specs, init_params, split_forward_and_specs,
+    FNOConfig, forward_and_specs, init_params, params_with_planes,
+    split_forward_and_specs,
 )
 from repro.data.loader import Normalizer
 from repro.launch.mesh import build_fno_mesh
@@ -165,8 +166,14 @@ class FNORunner:
             GeomodelCache(cache_bytes) if (cache == "auto" and n_static) else
             cache if isinstance(cache, GeomodelCache) else None
         )
+        # Fused Pallas serving: params are frozen, so the re/im plane
+        # layout of w_spec is computed ONCE here (weight-plane cache) and
+        # the complex original is dropped — every block of every rollout
+        # step reuses the same planes instead of re-splitting.
+        self._planes = bool(cfg.use_pallas)
         forward, x_spec, p_specs = forward_and_specs(
-            mesh, cfg, dp_axes=("data",), model_axis=model_axis
+            mesh, cfg, dp_axes=("data",), model_axis=model_axis,
+            planes=self._planes,
         )
         self._n_dp = mesh.shape["data"]
         self.buckets = (
@@ -203,6 +210,8 @@ class FNORunner:
         # feed the SAME arrays into the same jitted forward, so cached
         # serving is bit-identical to uncached serving
         self._enc_w = np.asarray(jax.device_get(params["encoder"]["w"]), np.float32)
+        if self._planes:
+            params = params_with_planes(params)
         self.params = jax.device_put(params, ns(p_specs))
         # one jit; XLA specializes per bucket shape on first use
         self._forward = jax.jit(
@@ -213,7 +222,8 @@ class FNORunner:
         self._forward_split = None
         if n_static:
             split_fwd, _, _ = split_forward_and_specs(
-                mesh, cfg, n_static, dp_axes=("data",), model_axis=model_axis
+                mesh, cfg, n_static, dp_axes=("data",), model_axis=model_axis,
+                planes=self._planes,
             )
             # pre_static [b, width, ...] and x_dyn [b, c_dyn, ...] share the
             # solution layout (channel dim unsharded)
@@ -255,6 +265,8 @@ class FNORunner:
         n_static: int = 0,
         cache="auto",
         cache_bytes: int = 256 << 20,
+        use_pallas: Optional[bool] = None,
+        comm_chunks: Optional[int] = None,
     ) -> "FNORunner":
         """Build a runner from a ``train.py --mode fno`` checkpoint dir.
 
@@ -264,6 +276,11 @@ class FNORunner:
         which may use a different device count / model-shard layout than
         training did (elastic restore) — and wires the normalizers so
         ingress/egress are in physical units.
+
+        ``use_pallas`` / ``comm_chunks`` default to what training persisted
+        (absent in older checkpoints -> unfused, unchunked); pass a value
+        to override — the fused and unfused paths are numerically
+        equivalent, so a checkpoint trained either way serves either way.
         """
         cfg_path = os.path.join(ckpt_dir, FNO_CONFIG_FILE)
         try:
@@ -283,6 +300,14 @@ class FNORunner:
             out_channels=saved["out_channels"],
             n_blocks=saved["n_blocks"],
             decoder_dim=saved["decoder_dim"],
+            use_pallas=bool(
+                saved.get("use_pallas", False) if use_pallas is None
+                else use_pallas
+            ),
+            comm_chunks=int(
+                saved.get("comm_chunks", 1) if comm_chunks is None
+                else comm_chunks
+            ),
         )
         shards = tuple(model_shards or saved.get("model_shards") or (1,))
         mesh, model_axis, _ = build_fno_mesh(

@@ -18,8 +18,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import (
-    FNOConfig, fno_forward, init_params, make_dist_forward,
-    make_pipeline_forward, param_specs, repartition, ulysses_attention,
+    FNOConfig, fno_forward, forward_and_specs, init_params, make_dist_forward,
+    make_pipeline_forward, param_specs, params_with_planes,
+    params_without_planes, repartition, repartition_chunked,
+    ulysses_attention,
 )
 from repro.common.compat import shard_map
 from repro.core.partition import make_mesh
@@ -264,6 +266,140 @@ def compressed_allreduce_error_feedback():
     np.testing.assert_allclose(
         np.asarray(red2 + err2.mean(0)), np.asarray(g.mean(0)), rtol=1e-4, atol=1e-5
     )
+
+
+@check
+def repartition_chunked_bit_identical():
+    """Channel-chunked repartition (the all-to-all overlap primitive) is
+    pure data movement: bit-identical to the blocking repartition for any
+    chunk count, divisible or not, clamped past the extent."""
+    mesh = make_mesh((8,), ("model",))
+    key = jax.random.PRNGKey(5)
+    x = (jax.random.normal(key, (2, 6, 8, 16))
+         + 1j * jax.random.normal(jax.random.PRNGKey(6), (2, 6, 8, 16))
+         ).astype(jnp.complex64)
+    spec_in, spec_out = P(None, None, "model", None), P(None, None, None, "model")
+    base = jax.jit(shard_map(
+        lambda t: repartition(t, 2, 3, "model"), mesh, spec_in, spec_out))(x)
+    for chunks in (1, 2, 3, 6, 16):  # 3 non-divisible; 16 clamps to extent 6
+        y = jax.jit(shard_map(
+            lambda t, c=chunks: repartition_chunked(
+                t, 2, 3, "model", chunks=c, chunk_dim=1),
+            mesh, spec_in, spec_out))(x)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(base))
+
+
+@check
+def fno_comm_chunks_matches_unchunked():
+    """comm_chunks>1 (channel-chunked all-to-alls through the whole dist
+    FFT pipeline) == the unchunked forward; channels are a pure batch dim."""
+    import dataclasses
+    cfg = FNOConfig(grid=(16, 16, 8, 8), modes=(4, 4, 2, 3), width=6,
+                    in_channels=2, out_channels=1, n_blocks=2, decoder_dim=8)
+    cfg_ck = dataclasses.replace(cfg, comm_chunks=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 16, 16, 8, 8))
+    mesh = make_mesh((2, 4), ("data", "model"))
+    y0 = jax.jit(make_dist_forward(mesh, cfg, dp_axes=("data",)))(params, x)
+    y2 = jax.jit(make_dist_forward(mesh, cfg_ck, dp_axes=("data",)))(params, x)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), rtol=1e-6, atol=1e-7)
+    mesh2 = make_mesh((2, 2, 2), ("data", "mx", "my"))
+    y0 = jax.jit(make_dist_forward(
+        mesh2, cfg, dp_axes=("data",), model_axis=("mx", "my")))(params, x)
+    y2 = jax.jit(make_dist_forward(
+        mesh2, cfg_ck, dp_axes=("data",), model_axis=("mx", "my")))(params, x)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), rtol=1e-6, atol=1e-7)
+
+
+@check
+def fno_fused_pallas_matches_serial():
+    """The ISSUE's gate: every use_pallas=True dist variant == the UNFUSED
+    serial oracle to <= 1e-4, gradients included (interpret-mode kernels)."""
+    import dataclasses
+    cfg = FNOConfig(grid=(16, 16, 8, 8), modes=(4, 4, 2, 3), width=6,
+                    in_channels=2, out_channels=1, n_blocks=2, decoder_dim=8,
+                    use_pallas=True, comm_chunks=2)
+    cfg_ref = dataclasses.replace(cfg, use_pallas=False, comm_chunks=1)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 16, 16, 8, 8))
+    y_ser = jax.jit(lambda p, x: fno_forward(p, x, cfg_ref))(params, x)
+
+    # serial fused forward + grads
+    y_f = jax.jit(lambda p, x: fno_forward(p, x, cfg))(params, x)
+    np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_ser), rtol=1e-4, atol=1e-5)
+    g_ser = jax.jit(jax.grad(lambda p: jnp.mean(fno_forward(p, x, cfg_ref) ** 2)))(params)
+    g_f = jax.jit(jax.grad(lambda p: jnp.mean(fno_forward(p, x, cfg) ** 2)))(params)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5),
+        g_f, g_ser,
+    )
+
+    # every 1-D dist variant, fused, vs the serial oracle
+    mesh = make_mesh((2, 4), ("data", "model"))
+    for variant in ("paper", "eager", "grady31"):
+        fwd = make_dist_forward(mesh, cfg, dp_axes=("data",), variant=variant)
+        y = jax.jit(fwd)(params, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ser), rtol=1e-4, atol=1e-5)
+
+    # 2-D pencils, fused
+    mesh2 = make_mesh((2, 2, 2), ("data", "mx", "my"))
+    for variant in ("paper", "eager"):
+        fwd = make_dist_forward(mesh2, cfg, dp_axes=("data",),
+                                model_axis=("mx", "my"), variant=variant)
+        y = jax.jit(fwd)(params, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ser), rtol=1e-4, atol=1e-5)
+
+    # gradient gate: fused dist vs unfused dist (tight) and vs serial
+    fwd_f = make_dist_forward(mesh, cfg, dp_axes=("data",))
+    fwd_u = make_dist_forward(mesh, cfg_ref, dp_axes=("data",))
+    g_df = jax.jit(jax.grad(lambda p: jnp.mean(fwd_f(p, x) ** 2)))(params)
+    g_du = jax.jit(jax.grad(lambda p: jnp.mean(fwd_u(p, x) ** 2)))(params)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5),
+        g_df, g_du,
+    )
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-5),
+        g_df, g_ser,
+    )
+    # 2-D grads, fused vs serial
+    fwd_f2 = make_dist_forward(mesh2, cfg, dp_axes=("data",), model_axis=("mx", "my"))
+    g_df2 = jax.jit(jax.grad(lambda p: jnp.mean(fwd_f2(p, x) ** 2)))(params)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-5),
+        g_df2, g_ser,
+    )
+
+
+@check
+def fno_planes_serving_forward_matches_serial():
+    """The serving runner's layout: plane-cached params (w_spec_re/_im)
+    through the fused dist forward == the serial oracle on complex params,
+    and the planes round-trip (params_without_planes) is exact."""
+    cfg = FNOConfig(grid=(16, 16, 8, 8), modes=(4, 4, 2, 3), width=6,
+                    in_channels=2, out_channels=1, n_blocks=2, decoder_dim=8,
+                    use_pallas=True, comm_chunks=2)
+    import dataclasses
+    cfg_ref = dataclasses.replace(cfg, use_pallas=False, comm_chunks=1)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 16, 16, 8, 8))
+    y_ser = jax.jit(lambda p, x: fno_forward(p, x, cfg_ref))(params, x)
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    fwd, x_spec, p_specs = forward_and_specs(
+        mesh, cfg, dp_axes=("data",), model_axis="model", planes=True)
+    pp = params_with_planes(params)
+    assert "w_spec" not in pp["blocks"] and "w_spec_re" in pp["blocks"]
+    y = jax.jit(fwd)(pp, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ser), rtol=1e-4, atol=1e-5)
+
+    back = params_without_planes(pp)
+    np.testing.assert_array_equal(
+        np.asarray(back["blocks"]["w_spec"]), np.asarray(params["blocks"]["w_spec"]))
 
 
 def main():

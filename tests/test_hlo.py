@@ -69,3 +69,68 @@ def test_wire_bytes_models():
     assert ha._wire_bytes("reduce-scatter", 25, 4) == 25 * 3
     assert ha._wire_bytes("collective-permute", 100, 4) == 100
     assert ha._wire_bytes("all-to-all", 100, 1) == 0
+
+
+# CPU XLA only emits sync collectives, so the async -start/-done pairs the
+# GPU/TPU latency-hiding scheduler produces are exercised on synthetic HLO.
+_ASYNC_HLO = """\
+HloModule synthetic
+
+ENTRY %main (p0: f32[8,16]) -> f32[64,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %ag-start = (f32[8,16]{1,0}, f32[64,16]{1,0}) all-gather-start(f32[8,16]{1,0} %p0), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ag-done = f32[64,16]{1,0} all-gather-done((f32[8,16]{1,0}, f32[64,16]{1,0}) %ag-start)
+  %rs-start = (f32[64,16]{1,0}, f32[8,16]{1,0}) reduce-scatter-start(f32[64,16]{1,0} %ag-done), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %rs-done = f32[8,16]{1,0} reduce-scatter-done((f32[64,16]{1,0}, f32[8,16]{1,0}) %rs-start)
+  ROOT %ar = f32[64,16]{1,0} all-reduce(f32[64,16]{1,0} %ag-done), replica_groups={{0,1,2,3,4,5,6,7}}
+}
+"""
+
+
+def test_async_start_done_pairs():
+    """-start accounted once (output element of the aliasing tuple), -done
+    skipped, and async wire bytes land in overlapped_bytes."""
+    st = ha.collect_collectives(_ASYNC_HLO, 8)
+    ag = 64 * 16 * 4 * 7 / 8           # full gathered output, ring model
+    rs = 8 * 16 * 4 * 7                # scattered shard (min tuple element)
+    ar = 2 * 64 * 16 * 4 * 7 / 8       # sync all-reduce
+    assert st.count_by_kind == {"all-gather": 1, "reduce-scatter": 1, "all-reduce": 1}
+    np.testing.assert_allclose(st.bytes_by_kind["all-gather"], ag)
+    np.testing.assert_allclose(st.bytes_by_kind["reduce-scatter"], rs)
+    np.testing.assert_allclose(st.bytes_by_kind["all-reduce"], ar)
+    np.testing.assert_allclose(st.overlapped_bytes, ag + rs)
+    np.testing.assert_allclose(st.overlap_fraction, (ag + rs) / (ag + rs + ar))
+    assert st.to_dict()["overlapped_bytes"] == st.overlapped_bytes
+
+
+def test_async_tuple_element_selection():
+    assert ha._tuple_elements("(f32[4], f32[8,2]{1,0})") == ["f32[4]", "f32[8,2]{1,0}"]
+    assert ha._tuple_elements("f32[4]") == ["f32[4]"]
+    # all-gather start: output is the big element; reduce-scatter: the small
+    assert ha._async_result_bytes("all-gather", "(f32[8,16], f32[64,16])") == 64 * 16 * 4
+    assert ha._async_result_bytes("reduce-scatter", "(f32[64,16], f32[8,16])") == 8 * 16 * 4
+
+
+def test_roofline_overlap_terms():
+    import importlib.util
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "roofline.py")
+    spec = importlib.util.spec_from_file_location("_roofline_under_test", path)
+    roofline = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(roofline)
+    d = {
+        "arch": "fno", "shape": "toy", "mesh": {"devices": 8, "shape": [8]},
+        "hlo_flops": 1e12, "hlo_bytes": 1e9, "model_flops": 8e11,
+        "collectives": {"total_bytes": 1e9, "overlapped_bytes": 5e8},
+        "memory": {"peak_per_device": 0},
+        "_file": "toy.json",
+    }
+    r = roofline.terms(d)
+    np.testing.assert_allclose(r["serialized_s"], r["compute_s"] + r["collective_s"])
+    np.testing.assert_allclose(r["overlapped_s"], max(r["compute_s"], r["collective_s"]))
+    np.testing.assert_allclose(r["overlap_ratio"], 0.5)
+    # legacy artifacts without overlapped_bytes degrade to ratio 0
+    d2 = dict(d, collectives={"total_bytes": 1e9})
+    assert roofline.terms(d2)["overlap_ratio"] == 0.0
+    assert "overlap" in roofline.markdown_table([r])

@@ -1,0 +1,157 @@
+"""Fused truncate+mix+pad spectral kernel vs the unfused XLA oracle.
+
+Everything runs in Pallas interpret mode on CPU; grids are kept small
+(each interpret-mode grid step costs ~ms). Covers the awkward shapes the
+parametrized sweeps in test_kernels.py miss: degenerate kept extents
+(m=1 and 2m == N), mixed pre-truncated/full dims, rFFT tail padding,
+non-divisible block_k on the flattened path, and gradients through the
+custom_vjp on both paths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.spectral_conv import (
+    cached_weight_planes,
+    clear_plane_cache,
+    plane_cache_stats,
+    spectral_apply,
+    spectral_apply_fused,
+    spectral_apply_fused_ref,
+    spectral_apply_ref,
+    weight_planes,
+)
+
+
+def _rand_cplx(key, shape):
+    ka, kb = jax.random.split(key)
+    return (jax.random.normal(ka, shape) + 1j * jax.random.normal(kb, shape)).astype(
+        jnp.complex64
+    )
+
+
+def _problem(seed, b, ci, co, dims, t_in, kt, t_out):
+    """(xf, w, trunc): dims is a 3-list of either (N, K) full-spectrum pairs
+    or (None, K) pre-truncated dims."""
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    trunc = tuple(n for n, _ in dims)
+    ext = tuple(k if n is None else n for n, k in dims)
+    kept = tuple(k for _, k in dims)
+    xf = _rand_cplx(kx, (b, ci) + ext + (t_in,))
+    w = _rand_cplx(kw, (ci, co) + kept + (kt,))
+    return xf, w, trunc, t_out
+
+
+# dim strategy: full-spectrum (N, K) with K even, 2 <= K <= N — including
+# the degenerate K=2 (m=1) and K=N (2m == N, nothing actually truncated)
+# corners — or pre-truncated (None, K) with any small K.
+_dim = st.sampled_from(
+    [(4, 2), (4, 4), (6, 2), (6, 4), (6, 6), (8, 4), (5, 2), (5, 4), (7, 6),
+     (None, 1), (None, 2), (None, 3), (None, 4)]
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 100),
+    b=st.integers(1, 2),
+    ci=st.integers(1, 4),
+    co=st.integers(1, 4),
+    d1=_dim,
+    d2=_dim,
+    d3=_dim,
+    kt=st.integers(1, 3),
+    t_extra=st.integers(0, 3),
+    pad_t=st.booleans(),
+)
+def test_fused_hypothesis(seed, b, ci, co, d1, d2, d3, kt, t_extra, pad_t):
+    t_in = kt + t_extra
+    t_out = t_in if pad_t else None
+    xf, w, trunc, t_out = _problem(seed, b, ci, co, [d1, d2, d3], t_in, kt, t_out)
+    ref = spectral_apply_fused_ref(xf, w, trunc, t_out)
+    out = spectral_apply_fused(xf, w, trunc, t_out=t_out, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
+
+
+def test_fused_degenerate_modes():
+    # m=1 on a truncated dim, 2m == N on another, pre-truncated K=1 third
+    xf, w, trunc, t_out = _problem(0, 2, 3, 4, [(6, 2), (4, 4), (None, 1)], 4, 3, 4)
+    ref = spectral_apply_fused_ref(xf, w, trunc, t_out)
+    out = spectral_apply_fused(xf, w, trunc, t_out=t_out, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
+
+
+def test_fused_gradients_interpret():
+    """Grads flow through the fused custom_vjp in interpret mode and match
+    the unfused oracle's — the ISSUE's serial-oracle gate at kernel level."""
+    xf, w, trunc, t_out = _problem(3, 2, 3, 3, [(6, 4), (None, 2), (5, 2)], 4, 3, 4)
+
+    def loss(fn):
+        def f(xf_, w_):
+            y = fn(xf_, w_)
+            return jnp.sum(jnp.abs(y) ** 2)
+        return f
+
+    fused = loss(lambda x_, w_: spectral_apply_fused(x_, w_, trunc, t_out=t_out, use_pallas=True))
+    ref = loss(lambda x_, w_: spectral_apply_fused_ref(x_, w_, trunc, t_out))
+    gx_f, gw_f = jax.grad(fused, argnums=(0, 1))(xf, w)
+    gx_r, gw_r = jax.grad(ref, argnums=(0, 1))(xf, w)
+    np.testing.assert_allclose(np.asarray(gx_f), np.asarray(gx_r), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gw_f), np.asarray(gw_r), rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 50),
+    k1=st.integers(1, 6),
+    k2=st.integers(1, 5),
+    block_k=st.sampled_from([3, 7, 8, 16]),  # 3 and 7 never divide K evenly
+)
+def test_flat_nondivisible_block_k(seed, k1, k2, block_k):
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    xf = _rand_cplx(kx, (2, 3, k1, k2))
+    w = _rand_cplx(kw, (3, 4, k1, k2))
+    ref = spectral_apply_ref(xf, w)
+    out = spectral_apply(xf, w, use_pallas=True, block_k=block_k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
+
+
+def test_flat_gradients_interpret():
+    key = jax.random.PRNGKey(7)
+    kx, kw = jax.random.split(key)
+    xf = _rand_cplx(kx, (2, 3, 4, 3))
+    w = _rand_cplx(kw, (3, 4, 4, 3))
+
+    def loss(use_pallas):
+        def f(x_, w_):
+            y = spectral_apply(x_, w_, use_pallas=use_pallas, block_k=7)
+            return jnp.sum(jnp.abs(y) ** 2)
+        return f
+
+    gx_p, gw_p = jax.grad(loss(True), argnums=(0, 1))(xf, w)
+    gx_r, gw_r = jax.grad(loss(False), argnums=(0, 1))(xf, w)
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_r), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gw_p), np.asarray(gw_r), rtol=2e-4, atol=2e-5)
+
+
+def test_plane_cache_hit_miss_and_inference_path():
+    clear_plane_cache()
+    xf, w, trunc, t_out = _problem(11, 1, 2, 3, [(4, 2), (None, 2), (4, 4)], 3, 2, 3)
+    p1 = cached_weight_planes(w)
+    p2 = cached_weight_planes(w)
+    assert p1 is p2, "warm hit must return the cached planes object"
+    stats = plane_cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1, stats
+
+    wr, wi = weight_planes(w)
+    np.testing.assert_allclose(np.asarray(p1[0]), np.asarray(wr))
+    np.testing.assert_allclose(np.asarray(p1[1]), np.asarray(wi))
+
+    # planes-tuple inference path (what FNORunner serves) matches the oracle
+    ref = spectral_apply_fused_ref(xf, w, trunc, t_out)
+    out = spectral_apply_fused(xf, p1, trunc, t_out=t_out, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
+    clear_plane_cache()
