@@ -1,0 +1,207 @@
+"""Fleet serving through the gateway vs the single-replica baseline.
+
+The production question behind the paper's payoff: one scheduler saturates
+one serving mesh — what does a FLEET of replicas buy under an open-loop
+arrival process (requests arrive at a fixed rate whether or not the
+backlog drains)? This benchmark drives the same UQ-style shared-geomodel
+ensemble through
+
+  * one replica (the ``bench_serve.py`` baseline shape: one FNORunner,
+    one scheduler), and
+  * a 2-replica gateway with cache-affinity routing,
+
+under the SAME arrival schedule, paced at ~4x the measured single-replica
+capacity so the baseline saturates. Every tick runs the real scheduler/
+runner (real routing, admission, compute, outputs); measured per-tick wall
+times compose the timeline on an event clock with one executor per
+replica — the deployment model, where each replica is its own serving
+host / mesh slice. The CI machine is a single core, so fleet concurrency
+cannot show up in wall time; the per-replica-executor accounting follows
+the PR-7 precedent (HLO async-collective overlap accounted analytically
+where CPU XLA can't express it). The single-shared-executor number — what
+THIS host can do — is reported alongside (``one_host_speedup``, ~1.0).
+
+Correctness is part of the contract:
+
+  * single-replica serving through the gateway must be BIT-identical to
+    the pre-gateway scheduler path on the same scenario set;
+  * the fleet's aggregate geomodel-cache hit-rate under affinity routing
+    must match the single-process rate (within 0.05) — scatter routing is
+    measured too, as the contrast.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _scenarios(cfg, n, n_geomodels, steps=1):
+    """Shared-geomodel UQ ensemble: ``n_geomodels`` distinct permeability
+    realizations interleaved across ``n`` scenarios, wells varying."""
+    from repro.data.pde.two_phase import TwoPhaseConfig, random_well_mask
+    from repro.launch.datagen import geomodel_channel
+    from repro.serve import ScenarioRequest
+
+    nx, ny, nz, nt = cfg.grid
+    sim_cfg = TwoPhaseConfig(grid=(nx, ny, nz), nt_frames=nt)
+    geos = [
+        geomodel_channel((nx, ny, nz), nt, seed=g) for g in range(n_geomodels)
+    ]
+    out = []
+    for i in range(n):
+        well = np.repeat(
+            random_well_mask(sim_cfg, 2, i)[None, :, :, :, None], nt, axis=-1
+        ).astype(np.float32)
+        x = np.concatenate([geos[i % n_geomodels], well], axis=0)
+        out.append(ScenarioRequest(rid=i, x=x, steps=steps))
+    return out
+
+
+def _fresh_caches(runners, cache_bytes=256 << 20):
+    from repro.serve import GeomodelCache
+
+    for r in runners:
+        r.cache = GeomodelCache(cache_bytes)
+
+
+def _open_loop(runners, cfg, n, n_geomodels, arrivals, policy,
+               per_replica=True, repeats=3):
+    """Best of ``repeats`` identical open-loop passes (fresh caches and
+    requests each time — routing is deterministic, so every pass sees the
+    same fleet state; repeating only damps wall-clock noise in the
+    measured per-tick service times)."""
+    from repro.serve import Gateway, serve_open_loop
+
+    best = None
+    for _ in range(repeats):
+        _fresh_caches(runners)
+        gw = Gateway(runners, policy=policy)
+        requests = _scenarios(cfg, n, n_geomodels)
+        report = serve_open_loop(
+            gw, requests, arrivals, per_replica_executors=per_replica
+        )
+        assert report.n_served == n, (report.n_served, n)
+        if best is None or report.scen_per_s > best[0].scen_per_s:
+            best = (report, gw)
+    return best
+
+
+def run(n_scenarios: int = 48, n_replicas: int = 2, slots: int = 4,
+        n_geomodels: int = 2):
+    import jax
+
+    from repro.core import FNOConfig, init_params
+    from repro.core.partition import make_mesh
+    from repro.data.loader import Normalizer
+    from repro.serve import FNORunner, Scheduler
+
+    # bench_serve's toy scale with one static geomodel channel; a single
+    # fixed bucket so every forward shares one XLA shape (the bit-identity
+    # regime) and service times are comparable across passes
+    cfg = FNOConfig(
+        grid=(8, 8, 4, 4), modes=(2, 2, 2, 2), width=2, in_channels=2,
+        n_blocks=1, decoder_dim=8,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    stats = {"mean": [0.2, 0.0], "std": [0.5, 1.0], "absmax": [1.0, 1.0]}
+
+    def make_runner():
+        return FNORunner(
+            cfg,
+            params,
+            mesh=make_mesh((1,), ("data",)),
+            model_axis=None,
+            max_slots=slots,
+            buckets=(slots,),
+            x_normalizer=Normalizer.from_stats(stats, "meanstd"),
+            y_normalizer=Normalizer.from_stats(stats, "meanstd"),
+            n_static=1,
+        )
+
+    base = make_runner()                      # the single-replica baseline
+    fleet = [make_runner() for _ in range(n_replicas)]
+    for r in [base] + fleet:
+        r.warmup()
+
+    # -- calibrate the arrival rate off measured single-replica capacity --
+    # two closed-loop passes, capacity from the best: the first pays
+    # residual lazy work (cold geomodel cache, dispatch paths) and would
+    # understate capacity, leaving even one replica arrival-limited
+    capacity = 0.0
+    for _ in range(2):
+        _fresh_caches([base])
+        t0 = time.perf_counter()
+        sched = Scheduler(base, slots)
+        for r in _scenarios(cfg, n_scenarios, n_geomodels):
+            sched.submit(r)
+        done = sched.run_until_done(max_steps=10000)
+        assert len(done) == n_scenarios
+        capacity = max(capacity, n_scenarios / (time.perf_counter() - t0))
+    rate = 8.0 * capacity  # open-loop: arrivals far outpace one replica
+    arrivals = [i / rate for i in range(n_scenarios)]
+
+    # -- single replica under the open-loop schedule ----------------------
+    single, gw_single = _open_loop(
+        [base], cfg, n_scenarios, n_geomodels, arrivals, "least-pending"
+    )
+    single_hit_rate = gw_single.stats()["fleet"]["cache_hit_rate"]
+
+    # -- the fleet, cache-affinity routing (per-replica executors) --------
+    fleet_rep, gw = _open_loop(
+        fleet, cfg, n_scenarios, n_geomodels, arrivals, "affinity"
+    )
+    affinity_hit_rate = gw.stats()["fleet"]["cache_hit_rate"]
+
+    # -- contrast: scatter (least-pending, affinity-blind) ----------------
+    _, gw_scatter = _open_loop(
+        fleet, cfg, n_scenarios, n_geomodels, arrivals, "least-pending"
+    )
+    scatter_hit_rate = gw_scatter.stats()["fleet"]["cache_hit_rate"]
+
+    # -- what this one host can do: same fleet, one shared executor -------
+    one_host, _ = _open_loop(
+        fleet, cfg, n_scenarios, n_geomodels, arrivals, "affinity",
+        per_replica=False,
+    )
+
+    # -- bit-identity: gateway single-replica == pre-gateway scheduler ----
+    from repro.serve import Gateway
+
+    _fresh_caches([base])
+    ref_reqs = _scenarios(cfg, n_scenarios, n_geomodels)
+    ref_sched = Scheduler(base, slots)
+    for r in ref_reqs:
+        ref_sched.submit(r)
+    ref_sched.run_until_done(max_steps=10000)
+    _fresh_caches([base])
+    gw_reqs = _scenarios(cfg, n_scenarios, n_geomodels)
+    gw1 = Gateway([base])
+    for r in gw_reqs:
+        gw1.submit(r)
+    gw1.run_until_done(max_steps=10000)
+    bitwise = all(
+        np.array_equal(a.prediction, b.prediction)
+        for a, b in zip(ref_reqs, gw_reqs)
+    )
+
+    per_scen_us = fleet_rep.makespan_s / n_scenarios * 1e6
+    derived = {
+        "replicas": n_replicas,
+        "single_scen_s": round(single.scen_per_s, 2),
+        "fleet_scen_s": round(fleet_rep.scen_per_s, 2),
+        "speedup": round(fleet_rep.scen_per_s / single.scen_per_s, 2),
+        "one_host_speedup": round(one_host.scen_per_s / single.scen_per_s, 2),
+        "p95_single_ms": round(single.percentile(0.95) * 1e3, 2),
+        "p95_fleet_ms": round(fleet_rep.percentile(0.95) * 1e3, 2),
+        "single_proc_hit_rate": round(single_hit_rate, 3),
+        "affinity_hit_rate": round(affinity_hit_rate, 3),
+        "hit_rate_gap": round(abs(affinity_hit_rate - single_hit_rate), 3),
+        "scatter_hit_rate": round(scatter_hit_rate, 3),
+        "bitwise_identical": int(bitwise),
+    }
+    return per_scen_us, derived
+
+
+if __name__ == "__main__":
+    print(run())

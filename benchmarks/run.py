@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV lines (derived = compact JSON).
   serve           continuous-batching FNO serving vs sequential + oracle
   cache           geomodel content-hash cache: cold vs warm ensemble serving
   spectral        fused Pallas spectral path: HBM bytes, plane cache, a2a overlap
+  gateway         multi-replica fleet vs single replica under open-loop arrivals
 """
 from __future__ import annotations
 
@@ -23,9 +24,9 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
-        bench_cache, bench_cloud, bench_comm, bench_cost, bench_loader,
-        bench_scaling, bench_serve, bench_spectral, bench_streaming,
-        bench_train,
+        bench_cache, bench_cloud, bench_comm, bench_cost, bench_gateway,
+        bench_loader, bench_scaling, bench_serve, bench_spectral,
+        bench_streaming, bench_train,
     )
     from benchmarks import roofline
 
@@ -41,6 +42,7 @@ def main() -> None:
         ("serve", bench_serve.run),
         ("cache", bench_cache.run),
         ("spectral", bench_spectral.run),
+        ("gateway", bench_gateway.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failures = 0

@@ -237,6 +237,49 @@ assert cache_stats["hit_rate"] > 0 and sched.dedup_attached == 8
 #   python src/repro/launch/serve_pde.py --ckpt-dir /tmp/geo_ckpt \
 #       --ensemble --static-channels 1 --dup 2 --verify
 
+# --- FLEET SERVING: a gateway over N replicas -----------------------------
+# Production scenario traffic outgrows one scheduler: the Gateway fronts N
+# independent replicas (each its own runner + scheduler — in production
+# its own host / mesh slice) and ROUTES requests: "affinity" keeps every
+# scenario sharing a geomodel on the replica that already cached it, so
+# the fleet-wide hit-rate matches the single-process rate and duplicates
+# still dedup; a replica whose runner raises is drained and its requests
+# fail over to the healthy ones. With one replica the gateway is a
+# pass-through — outputs stay bit-identical to the plain scheduler. Two
+# geomodel realizations below -> each pins to its own replica, so every
+# replica's cache serves exactly one geomodel (the fleet hit-rate match).
+from repro.serve import Gateway
+
+fleet = [uq_runner]
+for _ in range(1):  # replicate the SAME checkpoint (heterogeneous is fine)
+    extra = FNORunner(
+        uq_cfg, init_params(jax.random.PRNGKey(2), uq_cfg), mesh=mesh_2d,
+        model_axis=("mx", "my"), max_slots=4, n_static=1,
+    )
+    extra.warmup()
+    fleet.append(extra)
+gateway = Gateway(fleet, policy="affinity")
+geo2 = geomodel_channel(uq_cfg.grid[:3], uq_cfg.grid[3], seed=1)
+for i in range(8):
+    mask = random_well_mask(sim_cfg, 2, 200 + i)
+    well = np.repeat(mask[None, :, :, :, None], uq_cfg.grid[3], -1)
+    x = np.concatenate([(geo, geo2)[i % 2], well.astype(np.float32)], axis=0)
+    gateway.submit(ScenarioRequest(rid=200 + i, x=x, steps=2))
+served = gateway.run_until_done()
+stats = gateway.stats()
+for rs in stats["replicas"]:
+    print(f"  replica {rs['name']}: routed {rs['routed']}, served "
+          f"{rs['finished']}, backlog {rs['pending']}")
+print(f"fleet: {len(served)} served across {stats['fleet']['n_replicas']} "
+      f"replicas, cache hit-rate {stats['fleet']['cache_hit_rate']:.2f}")
+assert len(served) == 8 and not gateway.failed
+# Shell version (2 replicas restored from one checkpoint; benchmarks/run.py
+# gateway measures fleet scenarios/s + p95 vs single-replica under
+# open-loop arrivals):
+#   python src/repro/launch/serve_pde.py --ckpt-dir /tmp/geo_ckpt \
+#       --replicas 2 --policy affinity --ensemble --static-channels 1 \
+#       --dup 2 --verify
+
 # --- ONLINE TRAINING: train while the simulator is still writing ----------
 # The paper's biggest adoption cost is that the dataset "must be simulated
 # in advance". The streaming path removes it (Meyer-et-al online learning):

@@ -119,7 +119,10 @@ def oracle_rollout(runner, x_raw: np.ndarray, steps: int):
 
 
 def serve(runner, requests, max_slots: int, max_steps: int):
-    """(finished, seconds) for one serving pass over ``requests``."""
+    """(finished, seconds, scheduler) for one serving pass over
+    ``requests``. Callers must check ``sched.failed`` / the served count
+    (``check_served``) — a scenario that fails admission is REPORTED, not
+    an excuse to crash downstream."""
     from repro.serve import Scheduler
 
     sched = Scheduler(runner, max_slots)
@@ -128,12 +131,26 @@ def serve(runner, requests, max_slots: int, max_steps: int):
     t0 = time.perf_counter()
     done = sched.run_until_done(max_steps=max_steps)
     dt = time.perf_counter() - t0
+    return done, dt, sched
+
+
+def check_served(done, requests, failed):
+    """Exit nonzero with the per-request errors when the ensemble did not
+    fully serve. An all-failed ensemble (e.g. a wrong --static-channels /
+    --rollout-steps makes every admit raise) must report each admit error
+    and exit — not crash on an empty latency list."""
+    for r in failed:
+        print(f"scenario rid={r.rid} FAILED: {r.error}", file=sys.stderr)
+    if failed:
+        raise SystemExit(
+            f"{len(failed)}/{len(requests)} scenario(s) failed "
+            f"(errors above); {len(done)} served"
+        )
     if len(done) != len(requests):
         raise SystemExit(
-            f"served {len(done)}/{len(requests)} scenarios in "
-            f"{sched.steps} steps; raise --max-steps"
+            f"served {len(done)}/{len(requests)} scenarios; "
+            f"raise --max-steps"
         )
-    return done, dt, sched
 
 
 def main():
@@ -152,6 +169,16 @@ def main():
                     help="serving-mesh model parallelism; default: the "
                     "layout recorded in the checkpoint's fno_config.json")
     ap.add_argument("--max-steps", type=int, default=10000)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas behind the gateway; each is an "
+                    "independent FNORunner + scheduler restored from the "
+                    "same checkpoint (1 = the pre-gateway single-scheduler "
+                    "path, bit-identical to earlier releases)")
+    ap.add_argument("--policy", default="affinity",
+                    choices=("least-pending", "round-robin", "affinity"),
+                    help="gateway routing policy (--replicas > 1): "
+                    "backlog-aware least-pending, cyclic round-robin, or "
+                    "geomodel cache-affinity with least-pending fallback")
     ap.add_argument("--ensemble", action="store_true",
                     help="UQ-ensemble mode: every scenario shares the same "
                     "geomodel (static channels), only well locations vary; "
@@ -184,11 +211,14 @@ def main():
                     "forward; default: the checkpoint's recorded value")
     args = ap.parse_args()
 
-    from repro.serve import FNORunner
+    from repro.serve import FNORunner, Gateway
 
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas must be >= 1, got {args.replicas}")
     n_static = args.static_channels if args.ensemble else 0
-    try:
-        runner = FNORunner.from_checkpoint(
+
+    def load_runner():
+        return FNORunner.from_checkpoint(
             args.ckpt_dir,
             model_shards=args.model_shards,
             max_slots=args.max_batch,
@@ -197,37 +227,82 @@ def main():
             use_pallas=args.use_pallas,
             comm_chunks=args.comm_chunks,
         )
+
+    try:
+        runners = [load_runner() for _ in range(args.replicas)]
     except ValueError as e:  # library error -> CLI-flag wording
         raise SystemExit(f"--devices/--model-shards/--static-channels: {e}") from None
+    runner = runners[0]
     cfg = runner.cfg
     print(
         f"serving {cfg.grid} FNO (width {cfg.width}, {cfg.n_blocks} blocks) "
         f"from step {runner.restored_step} on mesh "
-        f"{dict(runner.mesh.shape)} (buckets {runner.buckets})"
+        f"{dict(runner.mesh.shape)} (buckets {runner.buckets}"
+        + (f", {args.replicas} replicas policy={args.policy})"
+           if args.replicas > 1 else ")")
     )
-    compile_s = runner.warmup()
+    compile_s = sum(r.warmup() for r in runners)
 
     requests, sim_cfg = build_scenarios(
         cfg, args.scenarios, args.wells, args.seed, args.rollout_steps,
         n_static=n_static, dup=args.dup,
     )
-    done, dt, sched = serve(runner, requests, args.max_batch, args.max_steps)
+    if args.replicas == 1:
+        # the pre-gateway path, untouched: one scheduler, bit-identical
+        done, dt, sched = serve(runner, requests, args.max_batch, args.max_steps)
+        check_served(done, requests, sched.failed)
+        engine_steps = sched.steps
+        dedup_attached = sched.dedup_attached
+        fleet_stats = None
+    else:
+        gateway = Gateway(runners, policy=args.policy)
+        for r in requests:
+            gateway.submit(r)
+        t0 = time.perf_counter()
+        done = gateway.run_until_done(max_steps=args.max_steps)
+        dt = time.perf_counter() - t0
+        check_served(done, requests, gateway.failed)
+        stats = gateway.stats()
+        fleet_stats = stats["fleet"]
+        engine_steps = fleet_stats["ticks"]
+        dedup_attached = fleet_stats["dedup_attached"]
+        for rs in stats["replicas"]:
+            print(
+                f"  replica {rs['name']}: routed {rs['routed']}, served "
+                f"{rs['finished']}, backlog {rs['pending']}, healthy "
+                f"{rs['healthy']}"
+                + (f", cache hit-rate {rs['cache']['hit_rate']:.3f}"
+                   if rs["cache"] else "")
+            )
     lat = sorted(r.finished_s - r.submitted_s for r in done)
     n = len(done)
-    print(
-        f"served {n} scenarios x {args.rollout_steps} rollout step(s) in "
-        f"{dt:.3f}s ({n / dt:.2f} scen/s, compile {compile_s:.2f}s excluded) "
-        f"over {sched.steps} engine steps / {runner.batched_steps} forwards; "
-        f"latency p50 {lat[n // 2] * 1e3:.1f}ms p95 "
-        f"{lat[min(n - 1, int(n * 0.95))] * 1e3:.1f}ms"
-    )
-    if runner.cache is not None:
+    forwards = sum(r.batched_steps for r in runners)
+    if n:
+        print(
+            f"served {n} scenarios x {args.rollout_steps} rollout step(s) in "
+            f"{dt:.3f}s ({n / dt:.2f} scen/s, compile {compile_s:.2f}s excluded) "
+            f"over {engine_steps} engine steps / {forwards} forwards; "
+            f"latency p50 {lat[n // 2] * 1e3:.1f}ms p95 "
+            f"{lat[min(n - 1, int(n * 0.95))] * 1e3:.1f}ms"
+        )
+    if args.replicas == 1 and runner.cache is not None:
         s = runner.cache.stats
         print(
             f"geomodel cache: hit-rate {s['hit_rate']:.3f} "
             f"({s['hits']} hits / {s['misses']} misses, {s['entries']} "
             f"entries, {s['bytes'] / 1e6:.2f} MB, {s['evictions']} evicted); "
-            f"dedup attached {sched.dedup_attached} follower(s)"
+            f"dedup attached {dedup_attached} follower(s)"
+        )
+    elif fleet_stats is not None and (
+        fleet_stats["cache_hits"] + fleet_stats["cache_misses"]
+    ):
+        print(
+            f"fleet geomodel cache: hit-rate "
+            f"{fleet_stats['cache_hit_rate']:.3f} "
+            f"({fleet_stats['cache_hits']} hits / "
+            f"{fleet_stats['cache_misses']} misses across "
+            f"{fleet_stats['n_replicas']} replicas); dedup attached "
+            f"{dedup_attached} follower(s)"
         )
 
     if args.bench_sequential:
@@ -235,7 +310,8 @@ def main():
             cfg, args.scenarios, args.wells, args.seed, args.rollout_steps,
             n_static=n_static, dup=args.dup,
         )
-        seq_done, seq_dt, _ = serve(runner, seq_requests, 1, args.max_steps)
+        seq_done, seq_dt, seq_sched = serve(runner, seq_requests, 1, args.max_steps)
+        check_served(seq_done, seq_requests, seq_sched.failed)
         speedup = seq_dt / dt
         print(
             f"sequential: {len(seq_done)} scenarios in {seq_dt:.3f}s "

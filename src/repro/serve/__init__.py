@@ -3,12 +3,18 @@
 ``Scheduler`` owns slots/admission/retirement; ``TransformerRunner`` (token
 decode) and ``FNORunner`` (PDE-scenario surrogate inference) plug into it.
 ``Engine`` is the LLM-facing thin client kept for API compatibility.
+``Gateway`` is the fleet layer: N independent replica schedulers behind
+one backlog/health-aware, cache-affine front door with an autoscaling
+hook; ``serve_open_loop`` drives an open-loop arrival process through it.
 """
 from repro.serve.engine import (  # noqa: F401
     Engine, Request, SERVABLE_FAMILIES, TransformerRunner,
 )
 from repro.serve.fno_runner import (  # noqa: F401
     FNORunner, ScenarioRequest, default_feedback,
+)
+from repro.serve.gateway import (  # noqa: F401
+    Gateway, OpenLoopReport, POLICIES, ReplicaHandle, serve_open_loop,
 )
 from repro.serve.geomodel_cache import (  # noqa: F401
     GeomodelCache, GeomodelEntry, content_key,

@@ -66,6 +66,10 @@ class ScenarioRequest:
     ``x`` is the RAW (physical-units) input ``[c_in, nx, ny, nz, nt]`` —
     e.g. the binary injector map repeated along t. ``outputs`` collects one
     de-normalized prediction ``[c_out, nx, ny, nz, nt]`` per rollout step.
+
+    ``priority`` / ``deadline_s`` feed the scheduler's admission policy
+    (higher priority first; within a priority, earliest deadline — relative
+    seconds from submission — first; default: FIFO).
     """
 
     rid: int
@@ -74,6 +78,8 @@ class ScenarioRequest:
     outputs: list = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[Exception] = None
+    priority: int = 0
+    deadline_s: Optional[float] = None
 
     @property
     def prediction(self) -> np.ndarray:
@@ -403,6 +409,29 @@ class FNORunner:
         """Give a deduped follower the primary's outputs (shared arrays —
         served outputs are treated as read-only)."""
         follower.outputs = list(primary.outputs)
+
+    def affinity_key(self, req: ScenarioRequest) -> Optional[str]:
+        """Fleet cache-affinity key: the content hash of the GEOMODEL only
+        (the static channels), not the whole scenario. A gateway routing
+        equal keys to the same replica makes that replica's private
+        ``GeomodelCache`` hit exactly as a single process would — and keeps
+        byte-identical duplicates on one scheduler so in-flight dedup still
+        fires. None (no static channels, or an input admit would reject
+        anyway) opts the request out of affinity routing."""
+        if not self.n_static:
+            return None
+        x = np.asarray(req.x, np.float32)
+        if x.ndim != len(self.cfg.grid) + 1 or x.shape[0] < self.n_static:
+            return None
+        return content_key(np.ascontiguousarray(x[: self.n_static]))
+
+    def reset(self, req: ScenarioRequest) -> None:
+        """Failover resubmission hook: a request pulled off a broken
+        replica mid-rollout restarts from its original ``x``, so partial
+        outputs are forgotten."""
+        req.outputs = []
+        req.done = False
+        req.error = None
 
     def admit(self, slot: int, req: ScenarioRequest) -> None:
         if req.steps < 1:

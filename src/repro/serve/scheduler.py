@@ -36,10 +36,15 @@ Requests are opaque to the scheduler except for the attributes it manages:
 ``done`` (set True on retirement/failure), ``error`` (the admit exception,
 on failure), and the latency timestamps (``submitted_s`` / ``admitted_s``
 / ``finished_s``, ``time.perf_counter`` values) that the serving CLIs
-report per-request latency from.
+report per-request latency from. Two OPTIONAL request attributes feed the
+admission policy: ``priority`` (int, higher admitted first when slots
+contend) and ``deadline_s`` (relative seconds from submission; within a
+priority class the earliest absolute deadline is admitted first — EDF).
+Requests carrying neither behave exactly as before: pure FIFO.
 """
 from __future__ import annotations
 
+import math
 import time
 import warnings
 from collections import deque
@@ -75,17 +80,29 @@ class Scheduler:
         self._primary_by_key: dict = {}
         self._followers: dict = {}
         self.dedup_attached = 0
+        self._seq = 0  # FIFO tie-break for the priority/deadline order
 
     # -- API ----------------------------------------------------------------
     def submit(self, request) -> None:
         request.submitted_s = time.perf_counter()
+        request._seq = self._seq
+        self._seq += 1
+        deadline = getattr(request, "deadline_s", None)
+        request._deadline_abs = (
+            request.submitted_s + deadline if deadline is not None else None
+        )
         if self._request_key is not None:
             key = self._request_key(request)
             if key is not None:
                 primary = self._primary_by_key.get(key)
                 if primary is not None:
-                    # identical work already queued/active: ride its slot
-                    request.admitted_s = time.perf_counter()
+                    # identical work already queued/active: ride its slot.
+                    # A follower is admitted when its PRIMARY is: attaching
+                    # to a still-queued primary leaves admitted_s unset
+                    # (stamped in admit_waiting alongside the primary), so
+                    # follower latency stats see the real queue wait.
+                    if getattr(primary, "admitted_s", None) is not None:
+                        request.admitted_s = time.perf_counter()
                     self._followers.setdefault(id(primary), []).append(request)
                     self.dedup_attached += 1
                     return
@@ -106,7 +123,8 @@ class Scheduler:
         return len(self.queue) + n_active + n_followers
 
     def admit_waiting(self) -> List[int]:
-        """Fill free slots from the queue (FIFO). Returns admitted slots.
+        """Fill free slots from the queue (priority > deadline > FIFO).
+        Returns admitted slots.
 
         A request whose ``runner.admit`` raises is marked failed (not
         silently dropped) and the freed slot is offered to the next queued
@@ -117,13 +135,18 @@ class Scheduler:
             if occupant is not None:
                 continue
             while self.queue:
-                request = self.queue.popleft()
+                request = self._pop_next()
                 try:
                     self.runner.admit(i, request)
                 except Exception as exc:  # noqa: BLE001 — any admit error
                     self._fail(request, exc)
                     continue
                 request.admitted_s = time.perf_counter()
+                # followers that attached while this primary was queued
+                # become admitted with it (they ride this very slot)
+                for follower in self._followers.get(id(request), []):
+                    if getattr(follower, "admitted_s", None) is None:
+                        follower.admitted_s = request.admitted_s
                 self.slots[i] = request
                 admitted.append(i)
                 break
@@ -149,10 +172,15 @@ class Scheduler:
         return len(active)
 
     def run_until_done(self, max_steps: int = 1000) -> list:
-        """Drive ticks until the pool drains. If ``max_steps`` is exhausted
-        with work still queued/active, the partial result is NOT silent: a
-        RuntimeWarning reports how many requests are unfinished."""
-        while self.has_work() and self.steps < max_steps:
+        """Drive ticks until the pool drains. ``max_steps`` budgets THIS
+        call, not the scheduler's lifetime — a reused scheduler (a gateway
+        drains it once per arrival wave) gets a fresh budget every call,
+        instead of spuriously bailing once cumulative ``self.steps``
+        crosses the threshold. If the budget is exhausted with work still
+        queued/active, the partial result is NOT silent: a RuntimeWarning
+        reports how many requests are unfinished."""
+        start_steps = self.steps
+        while self.has_work() and self.steps - start_steps < max_steps:
             self.step()
         if self.has_work():
             warnings.warn(
@@ -165,7 +193,54 @@ class Scheduler:
             )
         return self.finished
 
+    def drain_unfinished(self) -> list:
+        """Remove and return every not-yet-finished request: queued, active
+        in a slot, and dedup followers. The failover path — a gateway pulls
+        unfinished work off a replica whose runner broke and resubmits it
+        elsewhere. The runner is deliberately NOT consulted (it may be the
+        broken thing); slots are cleared and dedup state reset so the
+        requests can be submitted to a different scheduler."""
+        orphans = list(self.queue)
+        self.queue.clear()
+        for i, request in enumerate(self.slots):
+            if request is not None:
+                orphans.append(request)
+                self.slots[i] = None
+        for followers in self._followers.values():
+            orphans.extend(followers)
+        self._followers.clear()
+        self._primary_by_key.clear()
+        for request in orphans:
+            if hasattr(request, "_dedup_key"):
+                del request._dedup_key
+        return orphans
+
     # -- internals ----------------------------------------------------------
+    def _pop_next(self):
+        """Pop the queued request to admit next: highest ``priority``, then
+        earliest absolute deadline (EDF), then submission order. Requests
+        without either attribute all share the default key, so the scan
+        degenerates to exact FIFO."""
+        best_i, best_key = 0, self._admit_order(self.queue[0])
+        for i in range(1, len(self.queue)):
+            key = self._admit_order(self.queue[i])
+            if key < best_key:
+                best_i, best_key = i, key
+        if best_i == 0:
+            return self.queue.popleft()
+        request = self.queue[best_i]
+        del self.queue[best_i]
+        return request
+
+    @staticmethod
+    def _admit_order(request) -> tuple:
+        deadline = getattr(request, "_deadline_abs", None)
+        return (
+            -(getattr(request, "priority", 0) or 0),
+            deadline if deadline is not None else math.inf,
+            getattr(request, "_seq", 0),
+        )
+
     def _fail(self, request, exc: Exception) -> None:
         request.error = exc
         request.done = True

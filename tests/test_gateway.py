@@ -1,0 +1,499 @@
+"""Fleet gateway + scheduler-policy regressions.
+
+The bugfix contract of the gateway PR:
+  * ``run_until_done``'s ``max_steps`` budgets EACH call, not the
+    scheduler's lifetime (a reused scheduler must not spuriously bail);
+  * a dedup follower attached to a still-QUEUED primary is admitted when
+    the primary is — ``admitted_s`` reflects real queue wait;
+  * an all-failed ensemble exits the serving CLI nonzero with per-request
+    admit errors, instead of crashing on an empty latency list;
+and the gateway properties:
+  * single-replica serving through the gateway is BIT-identical to the
+    pre-gateway scheduler path, and a 2-replica fleet (same checkpoint,
+    fixed bucket) is bit-identical to single-replica serving;
+  * a replica whose runner raises mid-flight is failed over — its
+    unfinished requests land on healthy replicas, nothing wedges;
+  * cache-affinity routing keeps the fleet geomodel-cache hit-rate at the
+    single-process rate (scatter routing degrades it);
+  * the autoscaling hook spawns on backlog and retires idle replicas;
+  * ``serve_open_loop``'s per-replica event clock overlaps replica
+    service times (and the shared-executor clock does not).
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import FNOConfig, init_params
+from repro.core.partition import make_mesh
+from repro.data.loader import Normalizer
+from repro.serve import (
+    FNORunner, Gateway, ScenarioRequest, Scheduler, serve_open_loop,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# tiny FNO with one static (geomodel) channel + one dynamic channel, a
+# single fixed bucket so every forward shares one XLA batch shape — the
+# regime where serving results are bit-reproducible across interleavings
+CFG = FNOConfig(
+    grid=(8, 4, 4, 2), modes=(2, 2, 2, 1), width=2, in_channels=2,
+    n_blocks=1, decoder_dim=4,
+)
+PARAMS = init_params(jax.random.PRNGKey(7), CFG)
+BUCKET = 4
+STATS = {"mean": [0.1, 0.0], "std": [0.8, 1.0], "absmax": [2.0, 1.0]}
+
+
+def _make_runner(n_static=0):
+    return FNORunner(
+        CFG,
+        PARAMS,
+        mesh=make_mesh((1,), ("data",)),
+        model_axis=None,
+        max_slots=BUCKET,
+        x_normalizer=Normalizer.from_stats(STATS, "meanstd"),
+        y_normalizer=Normalizer.from_stats(STATS, "meanstd"),
+        buckets=(BUCKET,),
+        n_static=n_static,
+    )
+
+
+def _scenario(rid, steps=1, geo_seed=None, **kw):
+    """Random scenario; ``geo_seed`` pins the first (static) channel to a
+    shared geomodel realization so requests can share cache entries."""
+    rng = np.random.default_rng(1000 + rid)
+    x = rng.normal(size=(CFG.in_channels,) + CFG.grid).astype(np.float32)
+    if geo_seed is not None:
+        geo_rng = np.random.default_rng(5000 + geo_seed)
+        x[0] = geo_rng.normal(size=CFG.grid).astype(np.float32)
+    return ScenarioRequest(rid=rid, x=x, steps=steps, **kw)
+
+
+class DummyRunner:
+    """Minimal ModelRunner: each request needs ``work`` steps; optionally
+    raises out of ``step`` after ``break_after`` calls (the failover
+    trigger), or sleeps ``sleep_s`` per step (the event-clock workload)."""
+
+    def __init__(self, work=1, break_after=None, sleep_s=0.0, max_slots=4):
+        self.work = work
+        self.break_after = break_after
+        self.sleep_s = sleep_s
+        self.max_slots = max_slots
+        self.calls = 0
+        self._left = {}
+
+    def admit(self, slot, request):
+        self._left[slot] = getattr(request, "work", self.work)
+
+    def step(self, slots, active):
+        self.calls += 1
+        if self.break_after is not None and self.calls > self.break_after:
+            raise RuntimeError("replica hardware gone")
+        if self.sleep_s:
+            time.sleep(self.sleep_s)
+        done = []
+        for i in active:
+            self._left[i] -= 1
+            if self._left[i] <= 0:
+                done.append(i)
+        return done
+
+    def retire(self, slot, request):
+        self._left.pop(slot, None)
+
+    def reset(self, request):
+        request.done = False
+        request.error = None
+
+
+class KeyedDummyRunner(DummyRunner):
+    """DummyRunner + content dedup (key = request.key)."""
+
+    def request_key(self, request):
+        return getattr(request, "key", None)
+
+    def fanout(self, primary, follower):
+        follower.fanned_from = primary.rid
+
+
+class Req:
+    """Bare request object for dummy-runner tests."""
+
+    def __init__(self, rid, work=1, key=None, priority=0, deadline_s=None):
+        self.rid = rid
+        self.work = work
+        self.key = key
+        self.priority = priority
+        self.deadline_s = deadline_s
+        self.done = False
+        self.error = None
+
+
+# -- satellite regressions ---------------------------------------------------
+
+def test_run_until_done_budget_is_per_call():
+    """A reused scheduler gets a fresh max_steps budget every call: three
+    waves of work whose CUMULATIVE steps exceed the budget must all finish
+    without the spurious exhaustion warning the old cumulative comparison
+    produced."""
+    sched = Scheduler(DummyRunner(work=4), max_slots=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        for wave in range(3):
+            reqs = [Req(10 * wave + i, work=4) for i in range(2)]
+            for r in reqs:
+                sched.submit(r)
+            sched.run_until_done(max_steps=5)  # < 3 waves x 4 steps
+            assert all(r.done for r in reqs), f"wave {wave} unfinished"
+    assert sched.steps == 12  # 3 waves x 4 steps each actually ran
+
+
+def test_run_until_done_warns_when_budget_exhausted():
+    sched = Scheduler(DummyRunner(work=10), max_slots=1)
+    sched.submit(Req(0, work=10))
+    with pytest.warns(RuntimeWarning, match="max_steps=3 exhausted"):
+        sched.run_until_done(max_steps=3)
+
+
+def test_follower_of_queued_primary_admitted_with_primary():
+    """A dedup follower attached while its primary is still QUEUED must not
+    be stamped admitted at submit — it is admitted when the primary is, so
+    latency stats see the real queue wait."""
+    sched = Scheduler(KeyedDummyRunner(work=3), max_slots=1)
+    blocker = Req(0, work=3, key="blk")
+    primary = Req(1, work=3, key="shared")
+    sched.submit(blocker)
+    sched.step()  # blocker occupies the only slot
+    sched.submit(primary)  # queued behind it
+    follower = Req(2, work=3, key="shared")
+    sched.submit(follower)
+    assert sched.dedup_attached == 1
+    assert getattr(follower, "admitted_s", None) is None  # THE regression
+    sched.run_until_done()
+    assert follower.done and follower.fanned_from == 1
+    assert follower.admitted_s == primary.admitted_s
+    assert follower.submitted_s <= follower.admitted_s <= follower.finished_s
+    # latency ordering is now meaningful: queue wait > 0 for both
+    assert primary.admitted_s > primary.submitted_s
+
+
+def test_follower_of_active_primary_admitted_at_submit():
+    sched = Scheduler(KeyedDummyRunner(work=3), max_slots=1)
+    primary = Req(0, work=3, key="shared")
+    sched.submit(primary)
+    sched.step()  # primary active in its slot
+    follower = Req(1, work=3, key="shared")
+    sched.submit(follower)
+    assert follower.admitted_s is not None
+    assert follower.admitted_s >= primary.admitted_s
+
+
+def test_priority_and_deadline_admission_order():
+    """Queued contention resolves highest priority first, then earliest
+    deadline (EDF), then FIFO; requests with neither stay pure FIFO."""
+    sched = Scheduler(DummyRunner(work=1), max_slots=1)
+    blocker = Req(99, work=1)
+    sched.submit(blocker)
+    sched.step()  # occupy the slot so the rest queue up
+    a = Req(0)                       # plain FIFO
+    b = Req(1, deadline_s=60.0)      # later deadline
+    c = Req(2, deadline_s=1.0)       # earliest deadline
+    d = Req(3, priority=1)           # priority trumps deadlines
+    for r in (a, b, c, d):
+        sched.submit(r)
+    sched.run_until_done()
+    order = [r.rid for r in sched.finished]
+    assert order == [99, 3, 2, 1, 0]
+
+
+def test_plain_fifo_unchanged_without_policy_attrs():
+    sched = Scheduler(DummyRunner(work=1), max_slots=1)
+    for i in range(5):
+        sched.submit(Req(i))
+    sched.run_until_done()
+    assert [r.rid for r in sched.finished] == list(range(5))
+
+
+def _write_checkpoint(tmp_path):
+    """A minimal train.py-shaped checkpoint dir the serving CLI can load.
+    Its grid needs nx, ny >= 5 so the CLI's well-mask generator has room."""
+    from repro.train import checkpoint as ckpt_lib
+
+    cli_cfg = FNOConfig(
+        grid=(8, 8, 4, 2), modes=(2, 2, 2, 1), width=2, in_channels=2,
+        n_blocks=1, decoder_dim=4,
+    )
+    ck = str(tmp_path / "ck")
+    ckpt_lib.save(
+        ck, 0, {"params": init_params(jax.random.PRNGKey(0), cli_cfg)}
+    )
+    with open(os.path.join(ck, "fno_config.json"), "w") as f:
+        json.dump({
+            "grid": list(cli_cfg.grid), "modes": list(cli_cfg.modes),
+            "width": cli_cfg.width, "in_channels": cli_cfg.in_channels,
+            "out_channels": cli_cfg.out_channels,
+            "n_blocks": cli_cfg.n_blocks,
+            "decoder_dim": cli_cfg.decoder_dim, "model_shards": [1],
+            "use_pallas": False, "comm_chunks": 1,
+            "normalized": ["x", "y"], "normalizer": "meanstd",
+            "x_stats": STATS, "y_stats": STATS,
+        }, f)
+    return ck
+
+
+def test_all_failed_ensemble_exits_nonzero_with_admit_errors(tmp_path):
+    """--rollout-steps 0 makes every admit raise: the CLI must report each
+    admit error and exit nonzero — not crash indexing an empty latency
+    list (the old lat[n // 2] path) or claim --max-steps is at fault."""
+    ck = _write_checkpoint(tmp_path)
+    env = {**os.environ, "PYTHONPATH": f"{REPO}/src"}
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, f"{REPO}/src/repro/launch/serve_pde.py",
+         "--ckpt-dir", ck, "--scenarios", "3", "--rollout-steps", "0",
+         "--devices", "1"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode != 0
+    assert proc.stderr.count("FAILED") >= 3  # one line per scenario
+    assert "steps must be >= 1" in proc.stderr
+    assert "3/3 scenario(s) failed" in proc.stderr
+    assert "IndexError" not in proc.stderr
+    assert "Traceback" not in proc.stderr
+    assert "raise --max-steps" not in proc.stderr  # the old misdiagnosis
+
+
+# -- gateway properties ------------------------------------------------------
+
+def _serve_plain(runner, requests):
+    sched = Scheduler(runner, BUCKET)
+    for r in requests:
+        sched.submit(r)
+    sched.run_until_done()
+    assert not sched.failed
+    return requests
+
+
+def test_single_replica_gateway_bitwise_identical_to_scheduler():
+    runner = _make_runner()
+    ref = _serve_plain(runner, [_scenario(i, steps=2) for i in range(6)])
+    got = [_scenario(i, steps=2) for i in range(6)]
+    gw = Gateway([runner])
+    for r in got:
+        gw.submit(r)
+    gw.run_until_done()
+    assert not gw.failed
+    for a, b in zip(ref, got):
+        assert len(a.outputs) == len(b.outputs) == 2
+        for ya, yb in zip(a.outputs, b.outputs):
+            assert np.array_equal(ya, yb)  # BIT-identical
+
+
+def test_two_replica_fleet_bitwise_identical_to_single():
+    """Same checkpoint on every replica + one fixed bucket shape: which
+    replica served a scenario is invisible in its bits."""
+    ref = _serve_plain(_make_runner(), [_scenario(i) for i in range(8)])
+    got = [_scenario(i) for i in range(8)]
+    gw = Gateway([_make_runner(), _make_runner()], policy="round-robin")
+    for r in got:
+        gw.submit(r)
+    gw.run_until_done()
+    assert not gw.failed
+    assert all(h.routed == 4 for h in gw.replicas)
+    for a, b in zip(ref, got):
+        assert np.array_equal(a.prediction, b.prediction)
+
+
+def test_failed_replica_fails_over_without_wedging():
+    """Replica 0 breaks mid-flight: its queued+active requests move to
+    replica 1 and everything still finishes."""
+    gw = Gateway(
+        [DummyRunner(work=2, break_after=1), DummyRunner(work=2)],
+        policy="round-robin", max_slots=2,
+    )
+    reqs = [Req(i, work=2) for i in range(6)]
+    for r in reqs:
+        gw.submit(r)
+    gw.run_until_done()
+    assert all(r.done and r.error is None for r in reqs)
+    assert not gw.failed
+    assert not gw.replicas[0].healthy and gw.replicas[1].healthy
+    assert gw.rerouted > 0
+    stats = gw.stats()["fleet"]
+    assert stats["n_healthy"] == 1 and stats["finished"] == 6
+
+
+def test_no_healthy_replica_marks_orphans_failed():
+    gw = Gateway([DummyRunner(work=2, break_after=1)], max_slots=2)
+    reqs = [Req(i, work=2) for i in range(4)]
+    for r in reqs:
+        gw.submit(r)
+    gw.run_until_done()
+    assert len(gw.failed) == 4
+    assert all(r.error is not None for r in reqs)
+    with pytest.raises(RuntimeError, match="no healthy replicas"):
+        gw.submit(Req(9))
+
+
+def test_affinity_routing_preserves_cache_hit_rate():
+    """Two geomodels, two replicas: affinity keeps each geomodel's requests
+    on one replica, so the FLEET hit-rate equals the single-process rate;
+    least-pending scatter splits a geomodel across replicas and pays the
+    extra cold miss."""
+    n = 12
+    mk = lambda: [_scenario(i, geo_seed=i % 2) for i in range(n)]
+
+    single = _make_runner(n_static=1)
+    _serve_plain(single, mk())
+    single_rate = single.cache.stats["hit_rate"]
+
+    gw = Gateway([_make_runner(n_static=1), _make_runner(n_static=1)],
+                 policy="affinity")
+    for r in mk():
+        gw.submit(r)
+    gw.run_until_done()
+    fleet = gw.stats()["fleet"]
+    assert fleet["cache_hit_rate"] == pytest.approx(single_rate, abs=0.05)
+    # the two geomodel keys were pinned to DIFFERENT replicas
+    assert all(h.routed == n // 2 for h in gw.replicas)
+
+    gw2 = Gateway([_make_runner(n_static=1), _make_runner(n_static=1)],
+                  policy="least-pending")
+    for r in mk():
+        gw2.submit(r)
+    gw2.run_until_done()
+    scatter_rate = gw2.stats()["fleet"]["cache_hit_rate"]
+    assert fleet["cache_hit_rate"] >= scatter_rate
+
+
+def test_affinity_requests_dedup_on_one_replica():
+    """Byte-identical duplicates route to the same replica under affinity,
+    so in-flight dedup still absorbs them fleet-wide."""
+    gw = Gateway([_make_runner(n_static=1), _make_runner(n_static=1)],
+                 policy="affinity")
+    base = _scenario(0, geo_seed=0)
+    for rid in range(4):
+        gw.submit(ScenarioRequest(rid=rid, x=base.x.copy(), steps=1))
+    gw.run_until_done()
+    assert gw.stats()["fleet"]["dedup_attached"] == 3
+
+
+def test_autoscale_spawns_on_backlog_and_retires_idle():
+    gw = Gateway(
+        replica_factory=lambda: DummyRunner(work=3, max_slots=2),
+        min_replicas=1, max_replicas=3,
+        scale_up_backlog=4, scale_down_backlog=0, max_slots=2,
+    )
+    assert len(gw.replicas) == 1
+    reqs = [Req(i, work=3) for i in range(16)]
+    for r in reqs:
+        gw.submit(r)
+    gw.run_until_done()
+    assert all(r.done for r in reqs)
+    kinds = [k for _, k, _ in gw.scale_events]
+    assert "up" in kinds and "down" in kinds
+    peak = max(n for _, _, n in gw.scale_events)
+    assert 1 < peak <= 3
+    # retirement engaged as the backlog drained (ticks stop with the work,
+    # so the fleet need not be back at min_replicas by the time we return)
+    assert len(gw.replicas) < peak
+
+
+def test_round_robin_and_least_pending_routing():
+    gw = Gateway([DummyRunner(max_slots=2), DummyRunner(max_slots=2)],
+                 policy="round-robin", max_slots=2)
+    for i in range(6):
+        gw.submit(Req(i))
+    assert [h.routed for h in gw.replicas] == [3, 3]
+
+    gw2 = Gateway([DummyRunner(max_slots=2), DummyRunner(max_slots=2)],
+                  policy="least-pending", max_slots=2)
+    gw2.submit(Req(0, work=5))
+    # replica 0 now has backlog 1 -> next two go to the emptier replica 1,
+    # after which replica 1 is the busier one
+    gw2.submit(Req(1))
+    assert gw2.replicas[1].routed == 1
+    gw2.run_until_done()
+
+
+def test_heterogeneous_replicas_all_finish():
+    """Replicas may differ in slot count (production: different mesh
+    slices); least-pending just sees backlog."""
+    fast = DummyRunner(work=1, max_slots=4)
+    slow = DummyRunner(work=3, max_slots=1)
+    gw = Gateway([fast, slow], policy="least-pending")
+    reqs = [Req(i) for i in range(10)]
+    for r in reqs:
+        gw.submit(r)
+    gw.run_until_done()
+    assert all(r.done and r.error is None for r in reqs)
+    assert sum(h.routed for h in gw.replicas) == 10
+
+
+def test_duplicate_runner_instances_rejected():
+    r = DummyRunner()
+    with pytest.raises(ValueError, match="own runner instance"):
+        Gateway([r, r])
+
+
+def test_serve_open_loop_event_clock_overlaps_replicas():
+    """With one executor per replica, two replicas' measured service times
+    overlap on the virtual timeline (~2x); one shared executor serializes
+    them (~1x). The sleep IS the service time, so the ratio is tight."""
+    sleep_s, n = 0.004, 8
+    arrivals = [0.0] * n
+
+    def run(n_replicas, per_replica):
+        runners = [
+            DummyRunner(work=1, sleep_s=sleep_s, max_slots=1)
+            for _ in range(n_replicas)
+        ]
+        gw = Gateway(runners, policy="least-pending")
+        rep = serve_open_loop(
+            gw, [Req(i) for i in range(n)], arrivals,
+            per_replica_executors=per_replica,
+        )
+        assert rep.n_served == n
+        return rep.makespan_s
+
+    single = run(1, True)
+    dual = run(2, True)
+    dual_one_host = run(2, False)
+    assert dual < single * 0.75  # overlapped: ideally 0.5x
+    assert dual_one_host > single * 0.8  # serialized: ~1x
+
+
+def test_serve_open_loop_rejects_bad_arrivals():
+    gw = Gateway([DummyRunner()])
+    with pytest.raises(ValueError, match="nondecreasing"):
+        serve_open_loop(gw, [Req(0), Req(1)], [1.0, 0.5])
+    with pytest.raises(ValueError, match="arrival times"):
+        serve_open_loop(gw, [Req(0)], [0.0, 1.0])
+
+
+def test_drain_unfinished_empties_scheduler():
+    sched = Scheduler(KeyedDummyRunner(work=5), max_slots=1)
+    active = Req(0, work=5, key="a")
+    queued = Req(1, work=5, key="b")
+    follower = Req(2, work=5, key="a")
+    sched.submit(active)
+    sched.step()
+    sched.submit(queued)
+    sched.submit(follower)
+    orphans = sched.drain_unfinished()
+    assert {r.rid for r in orphans} == {0, 1, 2}
+    assert not sched.has_work() and sched.pending() == 0
+    # drained requests are resubmittable elsewhere: dedup state was reset
+    other = Scheduler(KeyedDummyRunner(work=1), max_slots=1)
+    for r in orphans:
+        other.submit(r)
+    other.run_until_done()
+    assert all(r.done for r in orphans)
