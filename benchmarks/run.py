@@ -18,8 +18,23 @@ Prints ``name,us_per_call,derived`` CSV lines (derived = compact JSON).
 from __future__ import annotations
 
 import json
+import os
 import sys
 import traceback
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _persist(name: str, us: float, derived: dict) -> None:
+    """Write the suite's result to repo-root ``BENCH_<name>.json`` so the
+    perf trajectory is diffable across PRs."""
+    path = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(
+            {"name": name, "us_per_call": round(us, 2), "derived": derived},
+            f, indent=2, sort_keys=True,
+        )
+        f.write("\n")
 
 
 def main() -> None:
@@ -51,6 +66,7 @@ def main() -> None:
             continue
         try:
             us, derived = fn()
+            _persist(name, us, derived)
             print(f"{name},{us:.2f},{json.dumps(derived, sort_keys=True)}")
         except Exception:  # noqa: BLE001
             failures += 1

@@ -280,6 +280,53 @@ assert len(served) == 8 and not gateway.failed
 #       --replicas 2 --policy affinity --ensemble --static-channels 1 \
 #       --dup 2 --verify
 
+# --- DEEP CACHE + FLEET-SHARED STORE --------------------------------------
+# The geomodel cache goes two levels past the encoder prelift: with
+# cache_level="deep" (the default) the runner also caches the first
+# spectral block's STATIC kept-mode spectra and weight-mixed contribution.
+# FFT -> truncate -> mix is linear, so block 0 runs only on the dynamic
+# remainder and the cached contribution is summed straight into its
+# pre-activation (core.fno.fno_forward_deep_split) — bit-identical to
+# recomputing, but the whole static spectral prefix is off the per-tick
+# path. A fleet-shared CacheStore adds the disaggregated tier behind the
+# per-replica LRUs: replicas consult it on local miss and publish fresh
+# entries, so a geomodel warmed anywhere is warm fleet-wide — including on
+# the replica that inherits an ensemble after a failover re-route.
+from repro.serve import DictCacheStore
+
+store = DictCacheStore()  # FileCacheStore(path) for cross-process fleets
+deep_fleet = []
+for _ in range(2):
+    rep = FNORunner(
+        uq_cfg, init_params(jax.random.PRNGKey(2), uq_cfg), mesh=mesh_2d,
+        model_axis=("mx", "my"), max_slots=4, n_static=1,
+        cache_level="deep", cache_store=store,
+    )
+    rep.warmup()
+    deep_fleet.append(rep)
+gw2 = Gateway(deep_fleet, policy="affinity")
+for i in range(6):
+    mask = random_well_mask(sim_cfg, 2, 300 + i)
+    well = np.repeat(mask[None, :, :, :, None], uq_cfg.grid[3], -1)
+    x = np.concatenate([geo, well.astype(np.float32)], axis=0)
+    gw2.submit(ScenarioRequest(rid=300 + i, x=x, steps=2))
+served = gw2.run_until_done()
+pinned = max(gw2.replicas, key=lambda h: h.routed)  # affinity pins the geo
+lv = pinned.runner.cache.stats["level_bytes"]
+print(f"deep cache on {pinned.name}: level bytes "
+      + ", ".join(f"{k}={v}" for k, v in lv.items())
+      + f"; shared store {store.stats['puts']} put(s), "
+      f"{store.stats['entries']} entr(y/ies)")
+assert len(served) == 6 and not gw2.failed
+assert lv["spectra"] > 0 and lv["contribution"] > 0  # the deep levels
+assert store.stats["puts"] >= 1  # published for the rest of the fleet
+# Shell version (per-level warm-vs-cold speedup + a simulated replica
+# failover with a cross-replica store hit live in benchmarks/run.py cache;
+# results persist to BENCH_cache.json):
+#   python src/repro/launch/serve_pde.py --ckpt-dir /tmp/geo_ckpt \
+#       --ensemble --static-channels 1 --cache-level deep \
+#       --cache-store /tmp/fleet_store --replicas 2 --verify
+
 # --- ONLINE TRAINING: train while the simulator is still writing ----------
 # The paper's biggest adoption cost is that the dataset "must be simulated
 # in advance". The streaming path removes it (Meyer-et-al online learning):

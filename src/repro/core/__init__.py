@@ -18,19 +18,24 @@ from repro.core.repartition import (  # noqa: F401
 )
 from repro.core.fno import (  # noqa: F401
     FNOConfig,
+    contrib_spec,
+    deep_split_forward_and_specs,
     encoder_prelift,
     fno_forward,
+    fno_forward_deep_split,
     fno_forward_dist,
     fno_forward_dist_2d,
     fno_forward_split,
     forward_and_specs,
     init_params,
     make_dist_forward,
+    make_dist_forward_deep_split,
     make_dist_forward_split,
     mse_loss,
     param_specs,
     params_with_planes,
     params_without_planes,
+    spectral_prelift,
     split_forward_and_specs,
 )
 from repro.core.pipeline import bubble_efficiency, make_pipeline_forward  # noqa: F401

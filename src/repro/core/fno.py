@@ -28,6 +28,8 @@ from repro.kernels.spectral_conv import (
     cached_weight_planes,
     spectral_apply,
     spectral_apply_fused,
+    spectral_apply_fused_add,
+    spectral_static_contribution,
 )
 
 
@@ -260,23 +262,36 @@ def _bypass(x, w_b, b_b):
 # Serial oracle.
 # ---------------------------------------------------------------------------
 
-def fno_block(x, w_spec, w_b, b_b, cfg: FNOConfig):
+def fno_block(x, w_spec, w_b, b_b, cfg: FNOConfig, *, add_kept=None, bypass_x=None):
     """Serial FNO block: irfftn(pad(W . trunc(rfftn(x)))) + bypass, GELU.
 
     With ``use_pallas`` the S / W· / S^T epilogue happens inside the fused
     kernel, so the FFT layer neither truncates nor pads — the mode tensor
     crosses HBM once instead of four times.
+
+    Deep-split serving (``fno_forward_deep_split``) passes ``add_kept``, a
+    cached kept-mode contribution summed into the spectral output before
+    the inverse transform, and ``bypass_x``, the full activation the 1x1
+    bypass runs on when ``x`` is only the dynamic remainder.
     """
     if cfg.use_pallas:
         nx, ny, nz, nt = cfg.grid
         xf = dfft.serial_forward(x, cfg.modes, truncate=False)
-        yf = spectral_apply_fused(xf, w_spec, (nx, ny, nz), t_out=nt // 2 + 1)
+        if add_kept is None:
+            yf = spectral_apply_fused(xf, w_spec, (nx, ny, nz), t_out=nt // 2 + 1)
+        else:
+            yf = spectral_apply_fused_add(
+                xf, w_spec, add_kept, (nx, ny, nz), t_out=nt // 2 + 1
+            )
         y = dfft.serial_adjoint(yf, cfg.grid, out_dtype=cfg.dtype, pre_padded=True)
     else:
         xf = dfft.serial_forward(x, cfg.modes)
         yf = spectral_apply(xf, w_spec, use_pallas=False)
+        if add_kept is not None:
+            yf = yf + add_kept.astype(yf.dtype)
         y = dfft.serial_adjoint(yf, cfg.grid, out_dtype=cfg.dtype)
-    return jax.nn.gelu(y + _bypass(x, w_b, b_b))
+    xb = x if bypass_x is None else bypass_x
+    return jax.nn.gelu(y + _bypass(xb, w_b, b_b))
 
 
 def _run_blocks(params: dict, h: jax.Array, cfg: FNOConfig, block_apply):
@@ -324,6 +339,89 @@ def fno_forward_split(
     )
 
 
+def spectral_prelift(params: dict, pre_static: jax.Array, cfg: FNOConfig, *, block: int = 0):
+    """Static prefix of the FIRST spectral block, computed once per geomodel.
+
+    The block-input split: write the first hidden state as
+    ``h = h_static + h_rem`` with ``h_static = GELU(pre_static + b)`` a pure
+    function of the cached static-channel prelift. FFT -> truncate -> mix is
+    linear, so block 0's kept-mode output is
+    ``W . S(h_rem)  +  W . S(h_static)`` — and the second term (and its
+    spectrum) can be cached alongside the prelift and summed into the
+    dynamic remainder's pre-activation on every warm request
+    (``fno_forward_deep_split``). The nonlinearity after block 0 stops the
+    split from going deeper.
+
+    ``pre_static``: [b, width, nx, ny, nz, nt] (or unbatched [width, ...]).
+    Returns ``(spectra, contribution)``: the truncated kept-mode spectrum
+    S(h_static) [.., width, 2mx, 2my, 2mz, mt] and the weight-mixed
+    contribution W_block . S(h_static) of the same shape — cache levels L3
+    and L4 of ``serve.geomodel_cache``.
+    """
+    unbatched = pre_static.ndim == 5
+    if unbatched:
+        pre_static = pre_static[None]
+    h_s = _encoder_from_prelift(params, pre_static.astype(cfg.dtype), cfg)
+    spectra = dfft.serial_forward(h_s, cfg.modes)
+    blk = jax.tree.map(lambda a: a[block], params["blocks"])
+    contrib = spectral_static_contribution(spectra, _block_weights(blk))
+    if unbatched:
+        spectra, contrib = spectra[0], contrib[0]
+    return spectra, contrib
+
+
+def _fno_forward_deep_impl(params, pre_static, x_dyn, cfg, n_static, block_first, block_rest):
+    """Shared deep-split body: rebuild the full first hidden state, run
+    block 0 on the dynamic REMAINDER ``h - h_static`` (its static kept-mode
+    term arrives precomputed via ``block_first``'s closure), then the
+    remaining blocks unchanged."""
+    pre_s = pre_static.astype(cfg.dtype)
+    pre = pre_s + encoder_prelift(params, x_dyn, cfg, slice(n_static, None))
+    h_full = _encoder_from_prelift(params, pre, cfg)
+    h_static = _encoder_from_prelift(params, pre_s, cfg)
+    blocks = params["blocks"]
+    blk0 = jax.tree.map(lambda a: a[0], blocks)
+    h = block_first(h_full - h_static, blk0, h_full)
+    rest = {**params, "blocks": jax.tree.map(lambda a: a[1:], blocks)}
+    return _run_blocks(rest, h, cfg, block_rest)
+
+
+def fno_forward_deep_split(
+    params: dict,
+    contrib: jax.Array,
+    pre_static: jax.Array,
+    x_dyn: jax.Array,
+    cfg: FNOConfig,
+    n_static: int,
+) -> jax.Array:
+    """Single-device forward from a cached prelift AND a cached first-block
+    static contribution (``spectral_prelift``).
+
+    ``contrib``: [b, width, 2mx, 2my, 2mz, mt] complex — the kept-mode
+    static contribution ``W_0 . S(h_static)``. Mathematically equal to
+    ``fno_forward_split`` (hence ``fno_forward``) up to float-summation
+    order; cold and warm cache paths both go through THIS function with
+    identical host-computed operands, so they are bit-identical to each
+    other.
+    """
+    ck = contrib.astype(jnp.complex64)
+
+    def first(h_rem, blk, h_full):
+        return fno_block(
+            h_rem, _block_weights(blk), blk["w_bypass"], blk["b_bypass"], cfg,
+            add_kept=ck, bypass_x=h_full,
+        )
+
+    def rest(h, blk):
+        return fno_block(
+            h, _block_weights(blk), blk["w_bypass"], blk["b_bypass"], cfg
+        )
+
+    return _fno_forward_deep_impl(
+        params, pre_static, x_dyn, cfg, n_static, first, rest
+    )
+
+
 # ---------------------------------------------------------------------------
 # Distributed forward (paper Algorithm 1 + 2). Call INSIDE shard_map with:
 #   x       sharded P(dp_axes, None, model_axis, None, None, None)
@@ -331,7 +429,8 @@ def fno_forward_split(
 #   everything else replicated.
 # ---------------------------------------------------------------------------
 
-def fno_block_dist(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
+def fno_block_dist(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str,
+                   *, add_kept=None, bypass_x=None):
     """Paper Alg. 2: local F/S over yzt, R_{x->y}, F/S over x, local spectral
     multiply (weights pre-sharded along k_y), adjoint path back.
 
@@ -339,12 +438,21 @@ def fno_block_dist(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
     paper's comm optimization), but S_x / S_x^T move into the kernel —
     the only dims still full-size at the kernel are the post-repartition
     x extent, exactly the three extra HBM passes the fusion removes.
+
+    ``add_kept`` is the LOCAL shard of a cached kept-mode contribution
+    ([b, co, 2mx, 2my/P, 2mz, mt] — same k_y sharding as ``w_spec``, see
+    ``contrib_spec``); ``bypass_x`` as in ``fno_block``.
     """
     if cfg.use_pallas:
         xf = dfft.dist_forward(
             x, cfg.modes, axis_name, trunc_x=False, comm_chunks=cfg.comm_chunks
         )
-        yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        if add_kept is None:
+            yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        else:
+            yf = spectral_apply_fused_add(
+                xf, w_spec, add_kept, (cfg.grid[0], None, None)
+            )
         y = dfft.dist_adjoint(
             yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
             pad_x=False, comm_chunks=cfg.comm_chunks,
@@ -352,14 +460,18 @@ def fno_block_dist(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
     else:
         xf = dfft.dist_forward(x, cfg.modes, axis_name, comm_chunks=cfg.comm_chunks)
         yf = spectral_apply(xf, w_spec, use_pallas=False)
+        if add_kept is not None:
+            yf = yf + add_kept.astype(yf.dtype)
         y = dfft.dist_adjoint(
             yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
             comm_chunks=cfg.comm_chunks,
         )
-    return jax.nn.gelu(y + _bypass(x, w_b, b_b))
+    xb = x if bypass_x is None else bypass_x
+    return jax.nn.gelu(y + _bypass(xb, w_b, b_b))
 
 
-def fno_block_dist_31(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
+def fno_block_dist_31(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str,
+                      *, add_kept=None, bypass_x=None):
     """Grady et al. [31] schedule: repartition the UNtruncated spectrum."""
     nx, ny, nz, nt = cfg.grid
     if cfg.use_pallas:
@@ -367,9 +479,14 @@ def fno_block_dist_31(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
             x, cfg.modes, axis_name, trunc_xzt=False,
             comm_chunks=cfg.comm_chunks,
         )
-        yf = spectral_apply_fused(
-            xf, w_spec, (nx, None, nz), t_out=nt // 2 + 1
-        )
+        if add_kept is None:
+            yf = spectral_apply_fused(
+                xf, w_spec, (nx, None, nz), t_out=nt // 2 + 1
+            )
+        else:
+            yf = spectral_apply_fused_add(
+                xf, w_spec, add_kept, (nx, None, nz), t_out=nt // 2 + 1
+            )
         y = dfft.dist_adjoint_untruncated(
             yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
             pad_xzt=False, comm_chunks=cfg.comm_chunks,
@@ -379,20 +496,29 @@ def fno_block_dist_31(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
             x, cfg.modes, axis_name, comm_chunks=cfg.comm_chunks
         )
         yf = spectral_apply(xf, w_spec, use_pallas=False)
+        if add_kept is not None:
+            yf = yf + add_kept.astype(yf.dtype)
         y = dfft.dist_adjoint_untruncated(
             yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
             comm_chunks=cfg.comm_chunks,
         )
-    return jax.nn.gelu(y + _bypass(x, w_b, b_b))
+    xb = x if bypass_x is None else bypass_x
+    return jax.nn.gelu(y + _bypass(xb, w_b, b_b))
 
 
-def fno_block_dist_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
+def fno_block_dist_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str,
+                         *, add_kept=None, bypass_x=None):
     """Beyond-paper: per-dim eager truncation (bit-equivalent, cheaper FFTs)."""
     if cfg.use_pallas:
         xf = dfft.dist_forward_eager(
             x, cfg.modes, axis_name, trunc_x=False, comm_chunks=cfg.comm_chunks
         )
-        yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        if add_kept is None:
+            yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        else:
+            yf = spectral_apply_fused_add(
+                xf, w_spec, add_kept, (cfg.grid[0], None, None)
+            )
         y = dfft.dist_adjoint_eager(
             yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
             pad_x=False, comm_chunks=cfg.comm_chunks,
@@ -402,21 +528,30 @@ def fno_block_dist_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_name: str):
             x, cfg.modes, axis_name, comm_chunks=cfg.comm_chunks
         )
         yf = spectral_apply(xf, w_spec, use_pallas=False)
+        if add_kept is not None:
+            yf = yf + add_kept.astype(yf.dtype)
         y = dfft.dist_adjoint_eager(
             yf, cfg.grid, axis_name, out_dtype=cfg.dtype,
             comm_chunks=cfg.comm_chunks,
         )
-    return jax.nn.gelu(y + _bypass(x, w_b, b_b))
+    xb = x if bypass_x is None else bypass_x
+    return jax.nn.gelu(y + _bypass(xb, w_b, b_b))
 
 
-def fno_block_dist_2d(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names):
+def fno_block_dist_2d(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names,
+                      *, add_kept=None, bypass_x=None):
     """2-D pencil block: x sharded along both x and y, spectral weights
     sharded along k_y x k_z (matching dist_forward_2d's output layout)."""
     if cfg.use_pallas:
         xf = dfft.dist_forward_2d(
             x, cfg.modes, axis_names, trunc_x=False, comm_chunks=cfg.comm_chunks
         )
-        yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        if add_kept is None:
+            yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        else:
+            yf = spectral_apply_fused_add(
+                xf, w_spec, add_kept, (cfg.grid[0], None, None)
+            )
         y = dfft.dist_adjoint_2d(
             yf, cfg.grid, axis_names, out_dtype=cfg.dtype,
             pad_x=False, comm_chunks=cfg.comm_chunks,
@@ -426,20 +561,29 @@ def fno_block_dist_2d(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names):
             x, cfg.modes, axis_names, comm_chunks=cfg.comm_chunks
         )
         yf = spectral_apply(xf, w_spec, use_pallas=False)
+        if add_kept is not None:
+            yf = yf + add_kept.astype(yf.dtype)
         y = dfft.dist_adjoint_2d(
             yf, cfg.grid, axis_names, out_dtype=cfg.dtype,
             comm_chunks=cfg.comm_chunks,
         )
-    return jax.nn.gelu(y + _bypass(x, w_b, b_b))
+    xb = x if bypass_x is None else bypass_x
+    return jax.nn.gelu(y + _bypass(xb, w_b, b_b))
 
 
-def fno_block_dist_2d_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names):
+def fno_block_dist_2d_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names,
+                            *, add_kept=None, bypass_x=None):
     """2-D pencil block with per-dim eager truncation."""
     if cfg.use_pallas:
         xf = dfft.dist_forward_2d_eager(
             x, cfg.modes, axis_names, trunc_x=False, comm_chunks=cfg.comm_chunks
         )
-        yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        if add_kept is None:
+            yf = spectral_apply_fused(xf, w_spec, (cfg.grid[0], None, None))
+        else:
+            yf = spectral_apply_fused_add(
+                xf, w_spec, add_kept, (cfg.grid[0], None, None)
+            )
         y = dfft.dist_adjoint_2d_eager(
             yf, cfg.grid, axis_names, out_dtype=cfg.dtype,
             pad_x=False, comm_chunks=cfg.comm_chunks,
@@ -449,11 +593,14 @@ def fno_block_dist_2d_eager(x, w_spec, w_b, b_b, cfg: FNOConfig, axis_names):
             x, cfg.modes, axis_names, comm_chunks=cfg.comm_chunks
         )
         yf = spectral_apply(xf, w_spec, use_pallas=False)
+        if add_kept is not None:
+            yf = yf + add_kept.astype(yf.dtype)
         y = dfft.dist_adjoint_2d_eager(
             yf, cfg.grid, axis_names, out_dtype=cfg.dtype,
             comm_chunks=cfg.comm_chunks,
         )
-    return jax.nn.gelu(y + _bypass(x, w_b, b_b))
+    xb = x if bypass_x is None else bypass_x
+    return jax.nn.gelu(y + _bypass(xb, w_b, b_b))
 
 
 def _fno_forward_dist_impl(params, x, cfg, axis_name, block_fn):
@@ -640,6 +787,114 @@ def make_dist_forward_split(
     return compat.shard_map(
         shard_fwd, mesh, (p_specs, x_spec, x_spec), x_spec
     )
+
+
+def contrib_spec(dp_axes, model_axis) -> P:
+    """PartitionSpec of the cached kept-mode contribution
+    [b, co, 2mx, 2my, 2mz, mt]: batch over the data axes, k_y over the
+    model axis (matching ``w_spec``'s sharding, since the contribution is a
+    per-mode product with it) — and k_z over the second axis of a pencil
+    pair. ``model_axis=None`` shards the batch dim only."""
+    if model_axis is None:
+        return P(dp_axes, None, None, None, None, None)
+    if isinstance(model_axis, (tuple, list)):
+        ax_x, ax_y = model_axis
+        return P(dp_axes, None, None, ax_x, ax_y, None)
+    return P(dp_axes, None, None, model_axis, None, None)
+
+
+def make_dist_forward_deep_split(
+    mesh: Mesh,
+    cfg: FNOConfig,
+    n_static: int,
+    *,
+    dp_axes=("data",),
+    model_axis="model",
+    variant: str = "paper",
+    planes: bool = False,
+):
+    """shard_map'd distributed forward taking
+    ``(params, contrib, pre_static, x_dyn)``.
+
+    ``contrib`` is the GLOBAL [b, width, 2mx, 2my, 2mz, mt] kept-mode
+    static contribution (``spectral_prelift``), sharded per
+    ``contrib_spec`` so each shard holds exactly the k_y (x k_z) modes its
+    ``w_spec`` shard would have produced. See ``fno_forward_deep_split``.
+    """
+    if isinstance(model_axis, (tuple, list)):
+        model_axes = tuple(model_axis)
+        if len(model_axes) != 2:
+            raise ValueError(f"expected 2 model axes, got {model_axes}")
+        cfg.validate_for_parallelism_2d(*(mesh.shape[a] for a in model_axes))
+        if variant not in _BLOCKS_2D:
+            raise ValueError(
+                f"variant {variant!r} has no 2-D schedule; pick from "
+                f"{sorted(_BLOCKS_2D)}"
+            )
+        block_fn, axis = _BLOCKS_2D[variant], model_axes
+        x_spec = input_spec(dp_axes, model_axes)
+        c_spec = contrib_spec(dp_axes, model_axes)
+        p_specs = param_specs(mesh, model_axes, planes=planes)
+    else:
+        cfg.validate_for_parallelism(mesh.shape[model_axis])
+        block_fn, axis = _BLOCKS[variant], model_axis
+        x_spec = input_spec(dp_axes, model_axis)
+        c_spec = contrib_spec(dp_axes, model_axis)
+        p_specs = param_specs(mesh, model_axis, planes=planes)
+
+    def shard_fwd(params, contrib, pre_static, x_dyn):
+        ck = contrib.astype(jnp.complex64)
+
+        def first(h_rem, blk, h_full):
+            return block_fn(
+                h_rem, _block_weights(blk), blk["w_bypass"], blk["b_bypass"],
+                cfg, axis, add_kept=ck, bypass_x=h_full,
+            )
+
+        def rest(h, blk):
+            return block_fn(
+                h, _block_weights(blk), blk["w_bypass"], blk["b_bypass"],
+                cfg, axis,
+            )
+
+        return _fno_forward_deep_impl(
+            params, pre_static, x_dyn, cfg, n_static, first, rest
+        )
+
+    return compat.shard_map(
+        shard_fwd, mesh, (p_specs, c_spec, x_spec, x_spec), x_spec
+    )
+
+
+def deep_split_forward_and_specs(
+    mesh: Mesh,
+    cfg: FNOConfig,
+    n_static: int,
+    *,
+    dp_axes=("data",),
+    model_axis=None,
+    variant: str = "paper",
+    planes: bool = False,
+):
+    """``split_forward_and_specs`` for the deep (first-block) split: the
+    returned ``forward(params, contrib, pre_static, x_dyn)`` additionally
+    consumes the cached kept-mode static contribution. Returns
+    ``(forward, x_spec, c_spec, p_specs)`` — ``c_spec`` is the
+    contribution's layout (``contrib_spec``)."""
+    x_spec = input_spec(dp_axes, model_axis)
+    c_spec = contrib_spec(dp_axes, model_axis)
+    p_specs = param_specs(mesh, model_axis, planes=planes)
+    if model_axis is None:
+        def forward(params, contrib, pre_static, x_dyn):
+            return fno_forward_deep_split(
+                params, contrib, pre_static, x_dyn, cfg, n_static
+            )
+    else:
+        forward = make_dist_forward_deep_split(
+            mesh, cfg, n_static, dp_axes=dp_axes, model_axis=model_axis,
+            variant=variant, planes=planes,
+        )
+    return forward, x_spec, c_spec, p_specs
 
 
 def split_forward_and_specs(

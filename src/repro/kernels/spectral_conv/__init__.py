@@ -4,9 +4,12 @@ from repro.kernels.spectral_conv.ops import (  # noqa: F401
     plane_cache_stats,
     spectral_apply,
     spectral_apply_fused,
+    spectral_apply_fused_add,
+    spectral_static_contribution,
     weight_planes,
 )
 from repro.kernels.spectral_conv.ref import (  # noqa: F401
+    pad_kept_ref,
     spectral_apply_fused_ref,
     spectral_apply_ref,
 )

@@ -41,6 +41,7 @@ from repro.kernels.spectral_conv.kernel import (
     spectral_fused_pallas,
 )
 from repro.kernels.spectral_conv.ref import (
+    pad_kept_ref,
     spectral_apply_fused_ref,
     spectral_apply_ref,
 )
@@ -276,3 +277,50 @@ def spectral_apply_fused(
     if not use_pallas:
         return spectral_apply_fused_ref(xf, w, trunc, t_out)
     return _fused_vjp(trunc, t_out, interpret)(xf, w)
+
+
+# ---------------------------------------------------------------------------
+# Static-contribution split: cache W . S(static) once, run the fused kernel
+# on the dynamic remainder only.
+# ---------------------------------------------------------------------------
+
+def spectral_static_contribution(sf: jax.Array, w) -> jax.Array:
+    """Kept-mode static contribution C = W . S(h_static).
+
+    sf: [b, ci, K1, K2, K3, KT] (or unbatched [ci, ...]) truncated kept-mode
+    spectrum of the static activation; w: complex kept-mode weights or a
+    ``(wr, wi)`` planes tuple (so serving can reuse ``cached_weight_planes``).
+    C is what FNORunner caches per geomodel: because FFT -> truncate -> mix
+    is linear up to the first nonlinearity, C is computed once and summed
+    with the dynamic remainder's kept-mode mix on every warm request.
+    """
+    w = _as_complex(w)
+    unbatched = sf.ndim == w.ndim - 1
+    if unbatched:
+        sf = sf[None]
+    y = spectral_apply_ref(sf, w)
+    return y[0] if unbatched else y
+
+
+def spectral_apply_fused_add(
+    xf: jax.Array,
+    w,
+    add: jax.Array,
+    trunc,
+    *,
+    t_out: int | None = None,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused truncate+mix+pad on the dynamic remainder ``xf`` plus a cached
+    kept-mode static contribution ``add`` [b, co, K1, K2, K3, KT].
+
+    Zero-padding is linear, so pad(mix(trunc(xf))) + pad(add) ==
+    pad(mix(trunc(xf)) + add): the Pallas kernel runs unmodified on the
+    remainder and the cached contribution is padded into the same layout
+    and summed outside.
+    """
+    y = spectral_apply_fused(
+        xf, w, trunc, t_out=t_out, use_pallas=use_pallas, interpret=interpret
+    )
+    return y + pad_kept_ref(add.astype(y.dtype), trunc, t_out)

@@ -45,6 +45,24 @@ def _pad_full_ref(yf: jax.Array, axis: int, n: int) -> jax.Array:
     return jnp.concatenate([lo, z, hi], axis=axis)
 
 
+def pad_kept_ref(yk: jax.Array, trunc, t_out: int | None = None) -> jax.Array:
+    """Zero-pad a kept-mode tensor [b, co, K1, K2, K3, KT] back to the fused
+    output layout: full size ``trunc[d]`` on each spatial dim where trunc[d]
+    is not None, and rFFT tail-pad the trailing dim to ``t_out`` when given.
+    Matches the pad half of ``spectral_apply_fused_ref`` exactly.
+    """
+    trunc = tuple(trunc)
+    kt = yk.shape[-1]
+    for d, n in enumerate(trunc):
+        if n is not None:
+            yk = _pad_full_ref(yk, 2 + d, n)
+    if t_out is not None and t_out != kt:
+        shape = list(yk.shape)
+        shape[-1] = t_out - kt
+        yk = jnp.concatenate([yk, jnp.zeros(shape, yk.dtype)], axis=-1)
+    return yk
+
+
 def spectral_apply_fused_ref(
     xf: jax.Array,
     w: jax.Array,

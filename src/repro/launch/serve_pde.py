@@ -190,6 +190,17 @@ def main():
                     "trains a 2-channel model -> 1 static channel)")
     ap.add_argument("--cache-bytes", type=int, default=256 << 20,
                     help="geomodel-cache byte budget (LRU beyond it)")
+    ap.add_argument("--cache-level", default="deep",
+                    choices=("prelift", "deep"),
+                    help="ensemble cache depth: 'prelift' stops at the "
+                    "encoder lift; 'deep' (default) also caches the first "
+                    "block's static kept-mode spectra + weight-mixed "
+                    "contribution and serves the deep-split forward")
+    ap.add_argument("--cache-store", default=None,
+                    help="fleet-shared cache store replicas consult on "
+                    "local miss: 'dict' for an in-process shared dict, or "
+                    "a directory path for a file-backed (.npz) store that "
+                    "persists across runs")
     ap.add_argument("--dup", type=int, default=1,
                     help="submit each scenario this many times (identical "
                     "in-flight requests dedup onto one slot)")
@@ -211,11 +222,16 @@ def main():
                     "forward; default: the checkpoint's recorded value")
     args = ap.parse_args()
 
-    from repro.serve import FNORunner, Gateway
+    from repro.serve import FNORunner, Gateway, open_cache_store
 
     if args.replicas < 1:
         raise SystemExit(f"--replicas must be >= 1, got {args.replicas}")
     n_static = args.static_channels if args.ensemble else 0
+    # one store shared by every replica — that is the point of the tier
+    store = (
+        open_cache_store(args.cache_store)
+        if args.cache_store and n_static else None
+    )
 
     def load_runner():
         return FNORunner.from_checkpoint(
@@ -224,6 +240,8 @@ def main():
             max_slots=args.max_batch,
             n_static=n_static,
             cache_bytes=args.cache_bytes,
+            cache_level=args.cache_level,
+            cache_store=store,
             use_pallas=args.use_pallas,
             comm_chunks=args.comm_chunks,
         )
@@ -271,7 +289,8 @@ def main():
                 f"  replica {rs['name']}: routed {rs['routed']}, served "
                 f"{rs['finished']}, backlog {rs['pending']}, healthy "
                 f"{rs['healthy']}"
-                + (f", cache hit-rate {rs['cache']['hit_rate']:.3f}"
+                + (f", cache hit-rate {rs['cache']['hit_rate']:.3f} "
+                   f"({rs['cache']['bytes'] / 1e6:.2f} MB)"
                    if rs["cache"] else "")
             )
     lat = sorted(r.finished_s - r.submitted_s for r in done)
@@ -287,11 +306,14 @@ def main():
         )
     if args.replicas == 1 and runner.cache is not None:
         s = runner.cache.stats
+        lv = s["level_bytes"]
         print(
             f"geomodel cache: hit-rate {s['hit_rate']:.3f} "
             f"({s['hits']} hits / {s['misses']} misses, {s['entries']} "
-            f"entries, {s['bytes'] / 1e6:.2f} MB, {s['evictions']} evicted); "
-            f"dedup attached {dedup_attached} follower(s)"
+            f"entries, {s['bytes'] / 1e6:.2f} MB, {s['evictions']} evicted, "
+            f"{s['deep_evictions']} deep-evicted); level MB "
+            + "/".join(f"{lv[k] / 1e6:.2f}" for k in lv)
+            + f" ({'/'.join(lv)}); dedup attached {dedup_attached} follower(s)"
         )
     elif fleet_stats is not None and (
         fleet_stats["cache_hits"] + fleet_stats["cache_misses"]
@@ -301,8 +323,16 @@ def main():
             f"{fleet_stats['cache_hit_rate']:.3f} "
             f"({fleet_stats['cache_hits']} hits / "
             f"{fleet_stats['cache_misses']} misses across "
-            f"{fleet_stats['n_replicas']} replicas); dedup attached "
+            f"{fleet_stats['n_replicas']} replicas, "
+            f"{fleet_stats['cache_bytes'] / 1e6:.2f} MB); dedup attached "
             f"{dedup_attached} follower(s)"
+        )
+    if store is not None:
+        ss = store.stats
+        print(
+            f"cache store: {ss['hits']} hits / {ss['misses']} misses "
+            f"({ss['hit_rate']:.3f}), {ss['puts']} puts, {ss['entries']} "
+            f"entries, {ss['bytes'] / 1e6:.2f} MB"
         )
 
     if args.bench_sequential:

@@ -7,6 +7,9 @@ decode) and ``FNORunner`` (PDE-scenario surrogate inference) plug into it.
 one backlog/health-aware, cache-affine front door with an autoscaling
 hook; ``serve_open_loop`` drives an open-loop arrival process through it.
 """
+from repro.serve.cache_store import (  # noqa: F401
+    CacheStore, DictCacheStore, FileCacheStore, open_cache_store,
+)
 from repro.serve.engine import (  # noqa: F401
     Engine, Request, SERVABLE_FAMILIES, TransformerRunner,
 )

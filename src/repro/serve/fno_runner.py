@@ -48,11 +48,12 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.fno import (
-    FNOConfig, forward_and_specs, init_params, params_with_planes,
-    split_forward_and_specs,
+    FNOConfig, deep_split_forward_and_specs, forward_and_specs, init_params,
+    params_with_planes, split_forward_and_specs,
 )
 from repro.data.loader import Normalizer
 from repro.launch.mesh import build_fno_mesh
+from repro.serve.cache_store import CacheStore
 from repro.serve.geomodel_cache import GeomodelCache, GeomodelEntry, content_key
 from repro.train import checkpoint as ckpt_lib
 
@@ -153,6 +154,8 @@ class FNORunner:
         n_static: int = 0,
         cache="auto",
         cache_bytes: int = 256 << 20,
+        cache_level: str = "deep",
+        cache_store: Optional[CacheStore] = None,
     ):
         if mesh is None:
             mesh, model_axis, _ = build_fno_mesh(jax.device_count(), (1,))
@@ -161,10 +164,21 @@ class FNORunner:
                 f"n_static={n_static} must be in [0, in_channels="
                 f"{cfg.in_channels}]"
             )
+        if cache_level not in ("prelift", "deep"):
+            raise ValueError(
+                f"cache_level must be 'prelift' or 'deep', got {cache_level!r}"
+            )
         self.cfg = cfg
         self.mesh = mesh
         self.model_axis = model_axis
         self.n_static = int(n_static)
+        # "prelift": cache stops at the encoder prelift (PR-6 behavior);
+        # "deep": also cache the first block's static kept-mode spectra and
+        # weight-mixed contribution, serving through the deep-split forward.
+        self._cache_level = cache_level
+        # Fleet-shared tier consulted on local-cache miss (cache_store):
+        # entries a peer replica computed are pulled instead of recomputed.
+        self.cache_store = cache_store
         # "auto": own cache when there are static channels; None: disabled
         # (the uncached reference path — same split forward, no reuse); a
         # GeomodelCache instance may be shared across runners/replicas.
@@ -216,6 +230,15 @@ class FNORunner:
         # feed the SAME arrays into the same jitted forward, so cached
         # serving is bit-identical to uncached serving
         self._enc_w = np.asarray(jax.device_get(params["encoder"]["w"]), np.float32)
+        self._enc_b = np.asarray(jax.device_get(params["encoder"]["b"]), np.float32)
+        # deep level: host copy of block 0's spectral weights (taken from
+        # the COMPLEX tree, before any planes conversion) for the per-miss
+        # numpy spectral prefix
+        self._w0 = None
+        if n_static and cache_level == "deep":
+            self._w0 = np.asarray(
+                jax.device_get(params["blocks"]["w_spec"][0])
+            ).astype(np.complex64)
         if self._planes:
             params = params_with_planes(params)
         self.params = jax.device_put(params, ns(p_specs))
@@ -226,6 +249,7 @@ class FNORunner:
             out_shardings=self._x_sharding,
         )
         self._forward_split = None
+        self._forward_deep = None
         if n_static:
             split_fwd, _, _ = split_forward_and_specs(
                 mesh, cfg, n_static, dp_axes=("data",), model_axis=model_axis,
@@ -238,6 +262,19 @@ class FNORunner:
                 in_shardings=(ns(p_specs), self._x_sharding, self._x_sharding),
                 out_shardings=self._x_sharding,
             )
+            if cache_level == "deep":
+                deep_fwd, _, c_spec, _ = deep_split_forward_and_specs(
+                    mesh, cfg, n_static, dp_axes=("data",),
+                    model_axis=model_axis, planes=self._planes,
+                )
+                self._forward_deep = jax.jit(
+                    deep_fwd,
+                    in_shardings=(
+                        ns(p_specs), NamedSharding(mesh, c_spec),
+                        self._x_sharding, self._x_sharding,
+                    ),
+                    out_shardings=self._x_sharding,
+                )
         self.x_normalizer = x_normalizer or Normalizer.from_stats(None)
         self.y_normalizer = y_normalizer or Normalizer.from_stats(None)
         self._x_norm_static = _slice_normalizer(self.x_normalizer, slice(0, n_static))
@@ -271,6 +308,8 @@ class FNORunner:
         n_static: int = 0,
         cache="auto",
         cache_bytes: int = 256 << 20,
+        cache_level: str = "deep",
+        cache_store: Optional[CacheStore] = None,
         use_pallas: Optional[bool] = None,
         comm_chunks: Optional[int] = None,
     ) -> "FNORunner":
@@ -359,6 +398,8 @@ class FNORunner:
             n_static=n_static,
             cache=cache,
             cache_bytes=cache_bytes,
+            cache_level=cache_level,
+            cache_store=cache_store,
         )
         runner.restored_step = ck_step
         return runner
@@ -376,27 +417,108 @@ class FNORunner:
     def _encode(self, x_raw: np.ndarray) -> np.ndarray:
         return self.x_normalizer.encode(self._check_shape(x_raw)[None])[0]
 
-    def _static_entry(self, key: str, x_static_raw: np.ndarray) -> GeomodelEntry:
-        """Normalized static channels + their encoder prelift, by content.
+    @property
+    def cache_version(self) -> str:
+        """Checkpoint+config signature namespacing fleet-shared store
+        entries: every weight/stat an entry's arrays depend on is part of
+        the digest, so replicas serving different checkpoints (or different
+        modes/width/level) can never exchange intermediates."""
+        if getattr(self, "_cache_version", None) is None:
+            import hashlib
 
-        Cache hit: the stored arrays, untouched — bit-identical to what the
-        miss path computed when it inserted them. Miss (or cache disabled):
-        normalize + host prelift (``np.einsum`` against the replicated
-        encoder rows — deterministic, so cold == warm bitwise).
+            h = hashlib.blake2b(digest_size=16)
+            h.update(repr((
+                tuple(self.cfg.grid), tuple(self.cfg.modes), self.cfg.width,
+                self.cfg.in_channels, self.n_static, self._cache_level,
+            )).encode())
+            parts = [self._enc_w, self._enc_b]
+            norm = self._x_norm_static
+            if not norm.identity:
+                parts += [norm.mean, norm.scale]
+            if self._w0 is not None:
+                parts.append(self._w0)
+            for a in parts:
+                arr = np.ascontiguousarray(np.asarray(a))
+                h.update(str(arr.dtype).encode())
+                h.update(str(arr.shape).encode())
+                h.update(arr)
+            self._cache_version = h.hexdigest()
+        return self._cache_version
+
+    @staticmethod
+    def _np_gelu(x: np.ndarray) -> np.ndarray:
+        """jax.nn.gelu's default tanh approximation, in float32 numpy."""
+        x = x.astype(np.float32)
+        inner = np.float32(0.7978845608028654) * (
+            x + np.float32(0.044715) * x * x * x
+        )
+        return np.float32(0.5) * x * (np.float32(1.0) + np.tanh(inner))
+
+    def _np_spectra(self, prelift: np.ndarray) -> np.ndarray:
+        """Truncated kept-mode spectrum of the static first hidden state,
+        computed on host: S(GELU(prelift + b)) — the numpy mirror of
+        ``core.fno.spectral_prelift``'s first half. Deterministic, so the
+        cold path recomputing it per tick stays bit-identical to warm."""
+        h = self._np_gelu(prelift + self._enc_b[:, None, None, None, None])
+        xf = np.fft.rfft(h, axis=-1)
+        xf = np.fft.fftn(xf, axes=(1, 2, 3))
+        mx, my, mz, mt = self.cfg.modes
+        for ax, m in ((1, mx), (2, my), (3, mz)):
+            lo = np.take(xf, range(m), axis=ax)
+            hi = np.take(xf, range(xf.shape[ax] - m, xf.shape[ax]), axis=ax)
+            xf = np.concatenate([lo, hi], axis=ax)
+        xf = xf[..., :mt]
+        return np.ascontiguousarray(xf.astype(np.complex64))
+
+    def _np_contribution(self, spectra: np.ndarray) -> np.ndarray:
+        """Block 0's static kept-mode contribution W_0 . S(h_static)."""
+        return np.ascontiguousarray(
+            np.einsum("ixyzt,ioxyzt->oxyzt", spectra, self._w0)
+            .astype(np.complex64)
+        )
+
+    def _static_entry(self, key: str, x_static_raw: np.ndarray) -> GeomodelEntry:
+        """Geomodel intermediates by content, walked level by level.
+
+        Lookup order: local cache -> fleet-shared store (on local miss) ->
+        host recompute of whatever levels are missing (each level derives
+        from the previous, so a deep-evicted entry re-pays only the
+        spectral prefix, not the normalization). Fresh or deepened entries
+        are re-published to both tiers. Cache hit with all levels: the
+        stored arrays, untouched — and the miss path is deterministic
+        numpy, so cold == warm bitwise.
         """
+        deep = self._cache_level == "deep"
+        entry = None
+        from_store = False
         if self.cache is not None:
             entry = self.cache.get(key)
-            if entry is not None:
-                return entry
-        normalized = self._x_norm_static.encode(
-            np.asarray(x_static_raw, np.float32)[None]
-        )[0]
-        prelift = np.einsum(
-            "ixyzt,io->oxyzt", normalized, self._enc_w[: self.n_static]
-        ).astype(np.float32)
-        entry = GeomodelEntry(key, normalized, prelift)
-        if self.cache is not None:
+        if entry is None and self.cache_store is not None:
+            entry = self.cache_store.get(self.cache_version, key)
+            from_store = entry is not None
+        fresh = entry is None
+        if fresh:
+            normalized = self._x_norm_static.encode(
+                np.asarray(x_static_raw, np.float32)[None]
+            )[0]
+            prelift = np.einsum(
+                "ixyzt,io->oxyzt", normalized, self._enc_w[: self.n_static]
+            ).astype(np.float32)
+            entry = GeomodelEntry(key, normalized, prelift)
+        grew = False
+        if deep and entry.contribution is None:
+            if entry.spectra is None:
+                entry = dataclasses.replace(
+                    entry, spectra=self._np_spectra(entry.prelift)
+                )
+            entry = dataclasses.replace(
+                entry, contribution=self._np_contribution(entry.spectra)
+            )
+            grew = True
+        if self.cache is not None and (fresh or grew or from_store):
             self.cache.put(key, entry)
+        if self.cache_store is not None and (fresh or grew):
+            self.cache_store.put(self.cache_version, key, entry)
         return entry
 
     def request_key(self, req: ScenarioRequest):
@@ -462,7 +584,17 @@ class FNORunner:
                 xd = np.zeros(
                     (b, self.cfg.in_channels - self.n_static) + grid, np.float32
                 )
-                jax.block_until_ready(self._forward_split(self.params, pre, xd))
+                if self._forward_deep is not None:
+                    ck = np.zeros(
+                        (b, self.cfg.width) + self.cfg.mode_shape, np.complex64
+                    )
+                    jax.block_until_ready(
+                        self._forward_deep(self.params, ck, pre, xd)
+                    )
+                else:
+                    jax.block_until_ready(
+                        self._forward_split(self.params, pre, xd)
+                    )
             else:
                 xb = np.zeros((b, self.cfg.in_channels) + grid, np.float32)
                 jax.block_until_ready(self._forward(self.params, xb))
@@ -488,11 +620,23 @@ class FNORunner:
             xd_b = np.zeros(
                 (bucket, self.cfg.in_channels - self.n_static) + grid, np.float32
             )
+            deep = self._forward_deep is not None
+            if deep:
+                ck_b = np.zeros(
+                    (bucket, self.cfg.width) + self.cfg.mode_shape, np.complex64
+                )
             for j, i in enumerate(active):
                 entry = self._static_entry(self._static_key[i], self._static_raw[i])
                 pre_b[j] = entry.prelift
                 xd_b[j] = self._dyn[i]
-            yb = np.asarray(self._forward_split(self.params, pre_b, xd_b))
+                if deep:
+                    ck_b[j] = entry.contribution
+            if deep:
+                yb = np.asarray(
+                    self._forward_deep(self.params, ck_b, pre_b, xd_b)
+                )
+            else:
+                yb = np.asarray(self._forward_split(self.params, pre_b, xd_b))
         else:
             xb = np.zeros((bucket, self.cfg.in_channels) + grid, np.float32)
             for j, i in enumerate(active):

@@ -270,13 +270,17 @@ class Gateway:
         fleet cache hit-rate sums hits/lookups over every replica's
         runner cache, including retired/unhealthy ones)."""
         replicas = []
-        hits = misses = dedup = 0
+        hits = misses = dedup = cache_bytes = 0
+        store = None
         for r in self.replicas + self.retired:
             cache = getattr(r.runner, "cache", None)
             cs = cache.stats if cache is not None else None
             if cs is not None:
                 hits += cs["hits"]
                 misses += cs["misses"]
+                cache_bytes += cs["bytes"]
+            if store is None:
+                store = getattr(r.runner, "cache_store", None)
             dedup += r.sched.dedup_attached
             replicas.append({
                 "name": r.name,
@@ -303,6 +307,9 @@ class Gateway:
                 "cache_hits": hits,
                 "cache_misses": misses,
                 "cache_hit_rate": hits / lookups if lookups else 0.0,
+                "cache_bytes": cache_bytes,
+                # replicas share one store instance; report it once
+                "store": store.stats if store is not None else None,
                 "rerouted": self.rerouted,
                 "scale_events": list(self.scale_events),
                 "ticks": self.ticks,

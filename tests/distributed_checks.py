@@ -376,6 +376,58 @@ def fno_fused_pallas_matches_serial():
 
 
 @check
+def fno_deep_split_matches_serial():
+    """The deep block-input split — a cached first-block kept-mode static
+    contribution summed into the dynamic remainder's pre-activation — ==
+    the UNFUSED serial oracle to <= 1e-4 through every serving layout:
+    serial (unfused + fused), every 1-D dist variant, and 2-D pencils."""
+    import dataclasses
+    from repro.core import (
+        encoder_prelift, fno_forward_deep_split, make_dist_forward_deep_split,
+        spectral_prelift,
+    )
+
+    n_static = 1
+    cfg = FNOConfig(grid=(16, 16, 8, 8), modes=(4, 4, 2, 3), width=6,
+                    in_channels=2, out_channels=1, n_blocks=2, decoder_dim=8,
+                    use_pallas=True, comm_chunks=2)
+    cfg_ref = dataclasses.replace(cfg, use_pallas=False, comm_chunks=1)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 16, 16, 8, 8))
+    y_ser = jax.jit(lambda p, x: fno_forward(p, x, cfg_ref))(params, x)
+
+    xd = x[:, n_static:]
+    pre_s = encoder_prelift(params, x[:, :n_static], cfg, slice(0, n_static))
+    _, contrib = spectral_prelift(params, pre_s, cfg_ref)
+
+    # serial deep split: unfused, then fused Pallas
+    for c in (cfg_ref, cfg):
+        y = jax.jit(lambda p, ck, ps, xdyn, c=c: fno_forward_deep_split(
+            p, ck, ps, xdyn, c, n_static))(params, contrib, pre_s, xd)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(y_ser), rtol=1e-4, atol=1e-5)
+
+    # every 1-D dist variant, fused, contrib sharded along k_y
+    mesh = make_mesh((2, 4), ("data", "model"))
+    for variant in ("paper", "eager", "grady31"):
+        fwd = make_dist_forward_deep_split(
+            mesh, cfg, n_static, dp_axes=("data",), variant=variant)
+        y = jax.jit(fwd)(params, contrib, pre_s, xd)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(y_ser), rtol=1e-4, atol=1e-5)
+
+    # 2-D pencils, fused, contrib sharded along (k_y, k_z)
+    mesh2 = make_mesh((2, 2, 2), ("data", "mx", "my"))
+    for variant in ("paper", "eager"):
+        fwd = make_dist_forward_deep_split(
+            mesh2, cfg, n_static, dp_axes=("data",),
+            model_axis=("mx", "my"), variant=variant)
+        y = jax.jit(fwd)(params, contrib, pre_s, xd)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(y_ser), rtol=1e-4, atol=1e-5)
+
+
+@check
 def fno_planes_serving_forward_matches_serial():
     """The serving runner's layout: plane-cached params (w_spec_re/_im)
     through the fused dist forward == the serial oracle on complex params,

@@ -1,0 +1,239 @@
+"""Fleet-shared geomodel cache store: the disaggregated tier behind the
+per-replica ``GeomodelCache``.
+
+Covers both backends (shared dict + atomic-rename npz files) against the
+store contract:
+  * roundtrip of full (4-level) and shallow (prelift-only) entries;
+  * version namespacing — replicas serving different checkpoints (or a
+    different cache level) can never exchange intermediates, and
+    ``FNORunner.cache_version`` produces those namespaces;
+  * never-downgrade — a shallow put cannot strip deep levels a deeper
+    replica already published;
+  * isolation — returned/stored arrays are copies (dict backend), corrupt
+    files are a miss and removed (file backend);
+  * the fleet property: after the pinned replica fails mid-serving, the
+    failover replica's LOCAL cache is cold but its store lookup hits, and
+    post-failover outputs are bitwise-identical to the originals.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FNOConfig, init_params
+from repro.core.partition import make_mesh
+from repro.data.loader import Normalizer
+from repro.serve import (
+    DictCacheStore, FileCacheStore, FNORunner, Gateway, GeomodelCache,
+    GeomodelEntry, ScenarioRequest, content_key, open_cache_store,
+)
+
+N_STATIC = 2
+CFG = FNOConfig(
+    grid=(8, 4, 4, 2), modes=(2, 2, 2, 1), width=2, n_blocks=2,
+    decoder_dim=4, in_channels=N_STATIC + 1,
+)
+PARAMS = init_params(jax.random.PRNGKey(3), CFG)
+X_STATS = {"mean": [0.2, -0.4, 0.1], "std": [0.7, 1.3, 0.8]}
+Y_STATS = {"mean": [0.1], "std": [0.8]}
+
+GEOMODEL = (
+    np.random.default_rng(42)
+    .normal(size=(N_STATIC,) + CFG.grid)
+    .astype(np.float32)
+)
+
+
+def _entry(seed: int, deep: bool = True) -> GeomodelEntry:
+    rng = np.random.default_rng(seed)
+    arr = rng.normal(size=(3, 4)).astype(np.float32)
+    pre = rng.normal(size=(2, 4)).astype(np.float32)
+    spec = contrib = None
+    if deep:
+        spec = (
+            rng.normal(size=(2, 3)) + 1j * rng.normal(size=(2, 3))
+        ).astype(np.complex64)
+        contrib = (spec * 1.5).astype(np.complex64)
+    return GeomodelEntry(content_key(arr), arr, pre, spec, contrib)
+
+
+@pytest.fixture(params=["dict", "file"])
+def store(request, tmp_path):
+    if request.param == "dict":
+        return DictCacheStore()
+    return FileCacheStore(str(tmp_path / "store"))
+
+
+def test_roundtrip_full_and_shallow_entries(store):
+    full, shallow = _entry(0), _entry(1, deep=False)
+    store.put("v1", full.key, full)
+    store.put("v1", shallow.key, shallow)
+    got = store.get("v1", full.key)
+    for name in ("normalized", "prelift", "spectra", "contribution"):
+        np.testing.assert_array_equal(getattr(got, name), getattr(full, name))
+    assert got.spectra.dtype == np.complex64
+    got_s = store.get("v1", shallow.key)
+    assert got_s.spectra is None and got_s.contribution is None
+    np.testing.assert_array_equal(got_s.prelift, shallow.prelift)
+    s = store.stats
+    assert s["hits"] == 2 and s["puts"] == 2 and s["entries"] == 2
+    assert s["bytes"] > 0 and s["hit_rate"] == 1.0
+
+
+def test_version_namespaces_are_isolated(store):
+    e = _entry(2)
+    store.put("ckpt-a", e.key, e)
+    assert store.get("ckpt-b", e.key) is None
+    assert store.get("ckpt-a", e.key) is not None
+    assert store.stats["misses"] == 1
+
+
+def test_store_never_downgrades_a_fuller_entry(store):
+    full = _entry(3)
+    store.put("v", full.key, full)
+    store.put("v", full.key, full.without_deep())  # ignored: shallower
+    assert store.get("v", full.key).contribution is not None
+    # but a deeper put DOES replace a shallow entry
+    e2 = _entry(4)
+    store.put("v", e2.key, e2.without_deep())
+    store.put("v", e2.key, e2)
+    assert store.get("v", e2.key).contribution is not None
+
+
+def test_dict_backend_stores_and_returns_copies():
+    store = DictCacheStore()
+    e = _entry(5)
+    ref = e.normalized.copy()
+    store.put("v", e.key, e)
+    e.normalized[:] = -1.0  # mutate the caller's arrays after put
+    got = store.get("v", e.key)
+    np.testing.assert_array_equal(got.normalized, ref)
+    got.normalized[:] = -2.0  # mutate a returned array
+    np.testing.assert_array_equal(store.get("v", e.key).normalized, ref)
+
+
+def test_file_backend_corrupt_entry_is_miss_and_removed(tmp_path):
+    store = FileCacheStore(str(tmp_path))
+    e = _entry(6)
+    store.put("v", e.key, e)
+    path = store._path("v", e.key)
+    with open(path, "wb") as f:
+        f.write(b"not an npz")
+    assert store.get("v", e.key) is None
+    assert not os.path.exists(path)  # corrupt file cleaned up
+    assert store.stats["misses"] == 1
+    # a fresh put rewrites it
+    store.put("v", e.key, e)
+    assert store.get("v", e.key) is not None
+
+
+def test_open_cache_store_spec(tmp_path):
+    assert isinstance(open_cache_store("dict"), DictCacheStore)
+    assert isinstance(open_cache_store("mem"), DictCacheStore)
+    fs = open_cache_store(str(tmp_path / "root"))
+    assert isinstance(fs, FileCacheStore)
+    assert os.path.isdir(fs.root)
+
+
+# ---------------------------------------------------------------------------
+# Runner integration: version signature + fleet failover reuse.
+# ---------------------------------------------------------------------------
+
+def _runner(level="deep", store=None, params=None):
+    return FNORunner(
+        CFG,
+        PARAMS if params is None else params,
+        mesh=make_mesh((1,), ("data",)),
+        model_axis=None,
+        max_slots=4,
+        buckets=(4,),
+        x_normalizer=Normalizer.from_stats(X_STATS, "meanstd"),
+        y_normalizer=Normalizer.from_stats(Y_STATS, "meanstd"),
+        n_static=N_STATIC,
+        cache=GeomodelCache(),
+        cache_level=level,
+        cache_store=store,
+    )
+
+
+def _scenario(rid: int, steps: int = 1) -> ScenarioRequest:
+    rng = np.random.default_rng(1000 + rid)
+    dyn = rng.normal(size=(1,) + CFG.grid).astype(np.float32)
+    return ScenarioRequest(
+        rid=rid, x=np.concatenate([GEOMODEL, dyn], axis=0), steps=steps
+    )
+
+
+def test_cache_version_namespaces_by_level_and_checkpoint():
+    """Same config + params -> same version (replicas share entries);
+    different cache level or different weights -> different version."""
+    a, b = _runner(), _runner()
+    assert a.cache_version == b.cache_version
+    assert a.cache_version != _runner(level="prelift").cache_version
+    other = init_params(jax.random.PRNGKey(9), CFG)
+    assert a.cache_version != _runner(params=other).cache_version
+
+
+def test_store_populates_local_cache_without_recompute():
+    """A replica that was never warmed serves from the store: its local
+    cache fills from the store entry and outputs match bitwise."""
+    store = DictCacheStore()
+    warmed, fresh = _runner(store=store), _runner(store=store)
+    ref = [_scenario(i, 2) for i in range(3)]
+    from repro.serve import Scheduler
+
+    sched = Scheduler(warmed, 4)
+    for r in ref:
+        sched.submit(r)
+    sched.run_until_done(max_steps=100)
+    assert store.puts == 1 and store.hits == 0
+    got = [_scenario(i, 2) for i in range(3)]
+    sched2 = Scheduler(fresh, 4)
+    for r in got:
+        sched2.submit(r)
+    sched2.run_until_done(max_steps=100)
+    assert store.hits >= 1  # local miss -> store hit, no host recompute
+    assert fresh.cache.stats["entries"] == 1
+    for a, b in zip(ref, got):
+        for ya, yb in zip(a.outputs, b.outputs):
+            np.testing.assert_array_equal(ya, yb)
+
+
+def test_store_keeps_geomodel_warm_across_replica_failover(tmp_path):
+    """Affinity pins the ensemble to one replica, warming its local cache
+    AND the file store. That replica then dies mid-wave; the failover
+    replica's local cache is cold but the store lookup hits — and the
+    re-served outputs are bitwise-identical to the pre-failure wave."""
+    store = FileCacheStore(str(tmp_path / "fleet"))
+    gw = Gateway(
+        [_runner(store=store), _runner(store=store)], policy="affinity"
+    )
+    wave1 = [_scenario(i, 2) for i in range(4)]
+    for r in wave1:
+        gw.submit(r)
+    gw.run_until_done(max_steps=200)
+    assert all(r.done and r.error is None for r in wave1)
+    pinned = max(gw.replicas, key=lambda h: h.routed)
+    other = next(h for h in gw.replicas if h is not pinned)
+    assert other.routed == 0 and store.puts == 1
+
+    def _dead_step(slots, active):
+        raise RuntimeError("simulated replica hardware failure")
+
+    pinned.runner.step = _dead_step
+    wave2 = [_scenario(i, 2) for i in range(4)]
+    for r in wave2:
+        gw.submit(r)
+    gw.run_until_done(max_steps=200)
+    assert all(r.done and r.error is None for r in wave2)
+    assert not pinned.healthy and gw.rerouted > 0
+    assert store.hits >= 1, store.stats  # the survivor hit the SHARED tier
+    assert other.runner.cache.stats["entries"] == 1
+    for a, b in zip(wave1, wave2):
+        assert len(a.outputs) == len(b.outputs) == 2
+        for ya, yb in zip(a.outputs, b.outputs):
+            np.testing.assert_array_equal(ya, yb)
+    fleet = gw.stats()["fleet"]
+    assert fleet["store"] is not None and fleet["store"]["hits"] >= 1
+    assert fleet["cache_bytes"] > 0

@@ -5,12 +5,18 @@ Covers this PR's contract:
     cold-cache path under mixed admission order, slot reuse, shared/unique
     geomodels, and multi-step rollouts (the cache only changes whether the
     deterministic host prelift is recomputed, never its value);
+  * the property holds at BOTH cache levels: ``prelift`` (encoder-only)
+    and ``deep`` (the block-input split serving cached first-block
+    kept-mode spectra/contribution through ``fno_forward_deep_split``);
   * the split forward (cached static prelift + dynamic lift) matches the
-    fused ``fno_forward`` to float tolerance;
+    fused ``fno_forward`` to float tolerance, and so does the deep split
+    (``spectral_prelift`` + ``fno_forward_deep_split``);
   * scheduler dedup: identical in-flight requests ride one slot and every
     follower gets the primary's outputs at retirement;
-  * LRU eviction honors the byte budget, and eviction never invalidates
-    an entry a caller still holds;
+  * LRU eviction honors the byte budget, strips the DEEP levels of the
+    LRU entry before fully evicting it, and eviction never invalidates
+    (or mutates) an entry a caller still holds — including a deep strip
+    landing mid-rollout while a slot holds its reference;
   * lifecycle regressions: a raising ``admit`` marks the request failed
     without wedging the pool; the bucket ladder must cover ``max_slots``
     at construction; ``run_until_done`` warns on exhausted ``max_steps``
@@ -23,7 +29,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import FNOConfig, fno_forward, init_params
+from repro.core import (
+    FNOConfig, encoder_prelift, fno_forward, fno_forward_deep_split,
+    init_params, spectral_prelift,
+)
 from repro.core.partition import make_mesh
 from repro.data.loader import Normalizer
 from repro.serve import (
@@ -59,7 +68,9 @@ def _make_runner(**kw):
     )
 
 
-RUNNER = _make_runner(cache=GeomodelCache())
+RUNNER = _make_runner(cache=GeomodelCache())  # default level: "deep"
+RUNNER_PRELIFT = _make_runner(cache=GeomodelCache(), cache_level="prelift")
+RUNNERS = {"deep": RUNNER, "prelift": RUNNER_PRELIFT}
 
 # a small pool of geomodels so hypothesis examples exercise SHARING
 GEOMODELS = [
@@ -102,23 +113,32 @@ def _serve(runner, requests, max_slots, interleave=0, split=None):
     split=st.integers(0, 7),
     steps=st.integers(1, 3),
     interleave=st.integers(0, 3),
+    level=st.sampled_from(("deep", "prelift")),
 )
 def test_warm_cache_bitwise_identical_to_cold(
-    geos, max_slots, split, steps, interleave
+    geos, max_slots, split, steps, interleave, level
 ):
     """Cold (cache disabled) and warm (shared cache) serving of the same
-    mixed-geomodel ensemble produce bit-identical outputs per request."""
-    RUNNER.cache = None
+    mixed-geomodel ensemble produce bit-identical outputs per request —
+    at both cache levels (encoder prelift only, and the deep block-input
+    split serving cached kept-mode contributions)."""
+    runner = RUNNERS[level]
+    runner.cache = None
     cold, _ = _serve(
-        RUNNER, [_scenario(i, g, steps) for i, g in enumerate(geos)],
+        runner, [_scenario(i, g, steps) for i, g in enumerate(geos)],
         max_slots, interleave, split,
     )
-    RUNNER.cache = GeomodelCache()
+    runner.cache = GeomodelCache()
     warm, _ = _serve(
-        RUNNER, [_scenario(i, g, steps) for i, g in enumerate(geos)],
+        runner, [_scenario(i, g, steps) for i, g in enumerate(geos)],
         max_slots, interleave, split,
     )
-    assert RUNNER.cache.stats["misses"] == len(set(geos))
+    assert runner.cache.stats["misses"] == len(set(geos))
+    lb = runner.cache.stats["level_bytes"]
+    if level == "deep":
+        assert lb["spectra"] > 0 and lb["contribution"] > 0
+    else:
+        assert lb["spectra"] == lb["contribution"] == 0
     for rc, rw in zip(
         sorted(cold, key=lambda r: r.rid), sorted(warm, key=lambda r: r.rid)
     ):
@@ -148,6 +168,34 @@ def test_split_forward_matches_fused_to_tolerance():
         xe = RUNNER.x_normalizer.encode(np.asarray(req.x, np.float32)[None])
         expected = RUNNER.y_normalizer.decode(np.asarray(fwd(PARAMS, xe)))[0]
         np.testing.assert_allclose(req.prediction, expected, rtol=1e-4, atol=1e-5)
+
+
+def test_deep_split_forward_matches_fused_to_tolerance():
+    """The block-input split — cached first-block static kept-mode
+    contribution (``spectral_prelift``) summed into the dynamic remainder's
+    pre-activation (``fno_forward_deep_split``) — equals the fused forward
+    up to float summation order."""
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(2, CFG.in_channels) + CFG.grid).astype(np.float32)
+    pre_s = encoder_prelift(PARAMS, x[:, :N_STATIC], CFG, slice(0, N_STATIC))
+    spectra, contrib = spectral_prelift(PARAMS, pre_s, CFG)
+    assert spectra.shape == (2, CFG.width) + CFG.mode_shape
+    assert contrib.shape == (2, CFG.width) + CFG.mode_shape
+    got = fno_forward_deep_split(
+        PARAMS, contrib, pre_s, x[:, N_STATIC:], CFG, N_STATIC
+    )
+    want = fno_forward(PARAMS, x, CFG)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+    )
+    # unbatched spectral_prelift matches the batched slice
+    s0, c0 = spectral_prelift(PARAMS, pre_s[0], CFG)
+    np.testing.assert_allclose(
+        np.asarray(c0), np.asarray(contrib[0]), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(s0), np.asarray(spectra[0]), rtol=1e-5, atol=1e-6
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +285,101 @@ def test_eviction_never_invalidates_served_requests():
             np.testing.assert_array_equal(yw, yc)
 
 
+def _deep_entry(seed: int) -> GeomodelEntry:
+    """An entry with all four levels populated (synthetic deep arrays)."""
+    rng = np.random.default_rng(seed)
+    arr = rng.normal(size=(4, 4)).astype(np.float32)
+    spec = (
+        rng.normal(size=(2, 3)) + 1j * rng.normal(size=(2, 3))
+    ).astype(np.complex64)
+    return GeomodelEntry(content_key(arr), arr, arr * 2.0, spec, spec * 0.5)
+
+
+def test_deep_eviction_strips_lru_before_full_eviction():
+    """Over budget, the LRU entry first loses only its deep levels
+    (kept-mode spectra + contribution); full eviction happens only once the
+    LRU is already shallow. Byte accounting follows each transition."""
+    e0, e1 = _deep_entry(0), _deep_entry(1)
+    full, shallow = e0.nbytes, e0.without_deep().nbytes
+    cache = GeomodelCache(max_bytes=full + shallow)
+    cache.put(e0.key, e0)
+    cache.put(e1.key, e1)
+    assert (cache.deep_evictions, cache.evictions) == (1, 0)
+    assert cache.bytes == shallow + full
+    got0, got1 = cache.get(e0.key), cache.get(e1.key)
+    assert not got0.has_deep and got1.has_deep  # LRU lost only its depth
+    np.testing.assert_array_equal(got0.normalized, e0.normalized)
+    np.testing.assert_array_equal(got0.prelift, e0.prelift)
+    s = cache.stats
+    assert s["level_bytes"]["contribution"] == e1.contribution.nbytes
+    assert s["level_bytes"]["normalized"] == 2 * e0.normalized.nbytes
+    assert sum(s["level_bytes"].values()) == cache.bytes == s["bytes"]
+    # third entry: the (already shallow) LRU e0 is now fully evicted, and
+    # e1 — next in LRU order — gets deep-stripped to make room
+    e2 = _deep_entry(2)
+    cache.put(e2.key, e2)
+    assert (cache.deep_evictions, cache.evictions) == (2, 1)
+    assert cache.get(e0.key) is None
+    assert not cache.get(e1.key).has_deep
+    assert cache.get(e2.key).has_deep
+    assert cache.bytes <= cache.max_bytes
+
+
+def test_deep_strip_never_mutates_a_held_entry():
+    """Deep eviction replaces the cache's entry with a stripped COPY: a
+    serving slot holding the original keeps its spectra/contribution."""
+    e0, e1 = _deep_entry(3), _deep_entry(4)
+    cache = GeomodelCache(max_bytes=e0.nbytes + e0.without_deep().nbytes)
+    held = cache.put(e0.key, e0)
+    cache.put(e1.key, e1)  # strips the cache's copy of e0
+    assert held is e0
+    assert held.spectra is not None and held.contribution is not None
+    assert cache.get(e0.key).spectra is None  # the cached copy IS stripped
+
+
+def test_reput_after_level_growth_updates_byte_accounting():
+    """Growing an entry's deep levels and re-putting it under the same key
+    replaces the recorded size — no double counting."""
+    e = _deep_entry(5)
+    cache = GeomodelCache()
+    cache.put(e.key, e.without_deep())
+    assert cache.bytes == e.without_deep().nbytes
+    cache.put(e.key, e)
+    assert cache.bytes == e.nbytes and len(cache) == 1
+    cache.clear()
+    assert cache.bytes == 0 and len(cache) == 0
+
+
+def test_mid_rollout_deep_eviction_is_bitwise_invisible():
+    """A budget that fits one FULL entry but not two: two alternating
+    geomodels keep their shallow levels cached while their kept-mode
+    spectra/contribution are repeatedly deep-evicted mid-rollout (each
+    slot holds its entry reference for the tick). Serving must stay
+    bitwise-identical to the cold path and never fully evict."""
+    probe = GeomodelCache()
+    RUNNER.cache = probe
+    _serve(RUNNER, [_scenario(0, 0)], 1)
+    full = probe.bytes
+    lb = probe.stats["level_bytes"]
+    shallow = lb["normalized"] + lb["prelift"]
+    assert lb["spectra"] > 0 and lb["contribution"] > 0
+    geos = [0, 1, 0, 1]
+    RUNNER.cache = GeomodelCache(max_bytes=full + shallow + 1)
+    warm, _ = _serve(
+        RUNNER, [_scenario(i, g, 3) for i, g in enumerate(geos)], 2
+    )
+    assert RUNNER.cache.deep_evictions > 0
+    assert RUNNER.cache.evictions == 0  # shallow levels never left
+    RUNNER.cache = None
+    cold, _ = _serve(
+        RUNNER, [_scenario(i, g, 3) for i, g in enumerate(geos)], 2
+    )
+    for rw, rc in zip(warm, cold):
+        assert len(rw.outputs) == len(rc.outputs) == 3
+        for yw, yc in zip(rw.outputs, rc.outputs):
+            np.testing.assert_array_equal(yw, yc)
+
+
 def test_datagen_geomodel_prepends_shared_static_channel(tmp_path):
     """``datagen --geomodel`` writes a 2-channel x store whose leading
     channel is the SAME log-permeability realization in every sample —
@@ -266,6 +409,29 @@ def test_content_key_discriminates():
     b = a.copy()
     b[3] = np.nextafter(b[3], np.float32(np.inf))  # one-ulp flip
     assert content_key(a) != content_key(b)
+
+
+def test_content_key_noncontiguous_matches_contiguous(monkeypatch):
+    """Non-contiguous arrays are hashed in bounded leading-axis slabs (no
+    full ``tobytes`` copy); the digest must equal the contiguous-copy
+    digest — including when the slab size forces many chunks."""
+    import repro.serve.geomodel_cache as gc
+
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(32, 9, 3)).astype(np.float32)
+    for view in (base[::2], base.transpose(1, 0, 2), base[5:21, ::3]):
+        assert not view.flags["C_CONTIGUOUS"]
+        assert content_key(view) == content_key(np.ascontiguousarray(view))
+    monkeypatch.setattr(gc, "_HASH_CHUNK_ROWS_BYTES", 64)  # many tiny slabs
+    view = base[::2]
+    assert gc.content_key(view) == content_key(np.ascontiguousarray(view))
+    # degenerate shapes: 0-d and empty arrays hash stably and distinctly
+    assert content_key(np.float32(3.5)) == content_key(
+        np.asarray(3.5, np.float32)
+    )
+    assert content_key(np.zeros((0, 4), np.float32)) != content_key(
+        np.zeros((4, 0), np.float32)
+    )
 
 
 # ---------------------------------------------------------------------------
